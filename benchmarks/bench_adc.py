@@ -1,0 +1,47 @@
+"""Paper Fig. 4: ADC vs exact distance computation — speedup vs
+dimensionality (paper: ~1.6x, growing with d)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pq as pqmod
+from repro.core.config import ProberConfig
+
+
+def _time(fn, *args, reps=20):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        fn(*args).block_until_ready()
+    t0 = time.time()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.time() - t0) / reps
+
+
+def run(dims=(128, 304, 960, 1776), n: int = 20000):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for d in dims:
+        x = jax.random.normal(key, (n, d))
+        q = x[0] + 0.1
+        cfg = ProberConfig(pq_m=16, pq_kc=64, pq_iters=5)
+        pq = pqmod.fit(x, cfg, key)
+        lut = pqmod.adc_table(pq, q)
+
+        exact = jax.jit(lambda xx, qq: jnp.sum((xx - qq[None]) ** 2, -1))
+        adc = jax.jit(pqmod.adc_distance)
+        t_exact = _time(exact, x, q)
+        t_adc = _time(adc, lut, pq.codes)
+        rows.append({"dim": d, "t_exact_ms": 1e3 * t_exact,
+                     "t_adc_ms": 1e3 * t_adc,
+                     "speedup": t_exact / t_adc})
+        print(f"[adc] d={d:5d} exact={1e3*t_exact:7.3f}ms "
+              f"adc={1e3*t_adc:7.3f}ms speedup={t_exact/t_adc:5.2f}x")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Paper Table 4: online estimation latency (ms/query) per dataset × method.
+
+Absolute numbers are CPU-host values (the paper used a 160-thread Xeon); the
+claim validated is the RELATIVE ordering — PQ < exact for high-d, both
+competitive with sampling.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+
+
+def run(datasets=None):
+    rows = []
+    for name in datasets or common.DATASETS:
+        ds = common.dataset(name)
+        d = ds.x.shape[1]
+        for meth, fn in {
+            "DynamicProber": lambda: common.eval_prober(
+                ds, common.prober_cfg(False, d)),
+            "DynamicProber-PQ": lambda: common.eval_prober(
+                ds, common.prober_cfg(True, d)),
+            "Sampling1%": lambda: common.eval_sampling(ds, 0.01),
+            "MLP-lite": lambda: common.eval_mlp(ds),
+        }.items():
+            out = fn()
+            rows.append({"dataset": name, "method": meth,
+                         "ms_per_query": out["ms_per_query"]})
+            print(f"[latency] {name:9s} {meth:16s} "
+                  f"{out['ms_per_query']:8.2f} ms/query")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,35 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+DEFAULT_DIR = Path("results/dryrun")
+
+
+def run(dry_dir: Path | str = DEFAULT_DIR, mesh: str = "single"):
+    rows = []
+    for p in sorted(Path(dry_dir).glob(f"*__{mesh}.json")):
+        rec = json.loads(p.read_text())
+        if "skipped" in rec:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "skipped": rec["skipped"]})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"],
+            "t_compute": r["t_compute_s"], "t_memory": r["t_memory_s"],
+            "t_collective": r["t_collective_s"], "dominant": r["dominant"],
+            "useful_ratio": r["useful_ratio"], "mfu_bound": r["mfu_bound"],
+            "peak_gib": rec["memory"]["peak_memory_in_bytes"] / 2 ** 30,
+        })
+        print(f"[roofline] {rec['arch']:22s} {rec['shape']:12s} "
+              f"dom={r['dominant']:10s} "
+              f"t=({r['t_compute_s']:.2e},{r['t_memory_s']:.2e},"
+              f"{r['t_collective_s']:.2e})s useful={r['useful_ratio']:.2f} "
+              f"mfu<={r['mfu_bound']:.3f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

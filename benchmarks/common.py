@@ -1,0 +1,116 @@
+"""Shared benchmark helpers: datasets at CPU scale, method registry,
+Q-error statistics (paper §6.1)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import baselines, estimator as E
+from repro.core.config import ProberConfig
+from repro.data import vectors
+
+BENCH_SCALE = {"sift": 0.25, "glove": 0.25, "fasttext": 0.25,
+               "gist": 0.25, "youtube": 0.25}
+N_QUERIES = 10
+DATASETS = list(vectors.CORPORA)
+
+_CACHE: dict = {}
+
+
+def dataset(name: str) -> vectors.VectorDataset:
+    if name not in _CACHE:
+        _CACHE[name] = vectors.load(name, n_queries=N_QUERIES,
+                                    scale=BENCH_SCALE[name])
+    return _CACHE[name]
+
+
+def prober_cfg(use_pq: bool = False, d: int = 128, eps: float = 0.01
+               ) -> ProberConfig:
+    m = 32 if d % 32 == 0 else (30 if d % 30 == 0 else 16)
+    return ProberConfig(n_tables=2, n_funcs=10, ring_budget=2048,
+                        central_budget=2048, chunk=128, eps=eps,
+                        use_pq=use_pq, pq_m=m, pq_kc=64, pq_iters=8,
+                        pq_exact_rings=2)
+
+
+def qerror(est: float, true: float) -> float:
+    e, c = max(est, 1.0), max(true, 1.0)
+    return max(e / c, c / e)
+
+
+def qerror_stats(errs) -> dict:
+    a = np.asarray(errs, dtype=np.float64)
+    return {"mean": float(a.mean()),
+            "p90": float(np.percentile(a, 90)),
+            "p95": float(np.percentile(a, 95)),
+            "p99": float(np.percentile(a, 99)),
+            "max": float(a.max())}
+
+
+def eval_prober(ds, cfg, key=None, return_time: bool = False):
+    key = key if key is not None else jax.random.PRNGKey(0)
+    t0 = time.time()
+    st = E.build(ds.x, cfg, key)
+    jax.block_until_ready(st.index.order)
+    build_s = time.time() - t0
+    errs, times = [], []
+    nq, nt = ds.taus.shape
+    for qi in range(nq):
+        qs = jnp.tile(ds.queries[qi][None], (nt, 1))
+        # warm compile once
+        if qi == 0:
+            E.estimate_batch(st, qs, ds.taus[qi], cfg,
+                             jax.random.PRNGKey(0)).block_until_ready()
+        t0 = time.time()
+        ests = E.estimate_batch(st, qs, ds.taus[qi], cfg,
+                                jax.random.PRNGKey(qi))
+        ests.block_until_ready()
+        times.append((time.time() - t0) / nt)
+        for t in range(nt):
+            errs.append(qerror(float(ests[t]), float(ds.cards[qi, t])))
+    out = {"errs": errs, "stats": qerror_stats(errs), "build_s": build_s,
+           "ms_per_query": 1e3 * float(np.mean(times))}
+    return out
+
+
+def eval_sampling(ds, rate: float = 0.01):
+    n = ds.x.shape[0]
+    ns = max(int(n * rate), 1)
+    errs, times = [], []
+    nq, nt = ds.taus.shape
+    baselines.sampling_estimate(ds.x, ds.queries[0], ds.taus[0, 0],
+                                jax.random.PRNGKey(0), ns).block_until_ready()
+    for qi in range(nq):
+        t0 = time.time()
+        for t in range(nt):
+            est = baselines.sampling_estimate(
+                ds.x, ds.queries[qi], ds.taus[qi, t],
+                jax.random.PRNGKey(qi * 100 + t), ns)
+            errs.append(qerror(float(est), float(ds.cards[qi, t])))
+        times.append((time.time() - t0) / nt)
+    return {"errs": errs, "stats": qerror_stats(errs),
+            "ms_per_query": 1e3 * float(np.mean(times))}
+
+
+def eval_mlp(ds, key=None, train_frac: float = 0.6):
+    """Train the learned baseline on held-out queries, eval on the rest."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    nq = ds.queries.shape[0]
+    ntr = max(int(nq * train_frac), 1)
+    t0 = time.time()
+    m = baselines.fit_mlp(ds.x, ds.queries[:ntr], ds.taus[:ntr],
+                          ds.cards[:ntr], key)
+    train_s = time.time() - t0
+    errs, times = [], []
+    for qi in range(ntr, nq):
+        t0 = time.time()
+        for t in range(ds.taus.shape[1]):
+            est = float(baselines.mlp_estimate(m, ds.queries[qi],
+                                               ds.taus[qi, t]))
+            errs.append(qerror(est, float(ds.cards[qi, t])))
+        times.append((time.time() - t0) / ds.taus.shape[1])
+    return {"errs": errs, "stats": qerror_stats(errs), "build_s": train_s,
+            "ms_per_query": 1e3 * float(np.mean(times)), "model": m}

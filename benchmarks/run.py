@@ -1,0 +1,82 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus human-readable progress
+lines prefixed with [tag]).
+
+  PYTHONPATH=src python -m benchmarks.run             # everything
+  PYTHONPATH=src python -m benchmarks.run qerror adc  # a subset
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    which = set(sys.argv[1:]) or {"qerror", "latency", "build", "adc",
+                                  "epsilon", "updates", "roofline"}
+    csv: list[tuple[str, float, str]] = []
+
+    if "qerror" in which:
+        from benchmarks import bench_qerror
+        for r in bench_qerror.run():
+            csv.append((f"qerror/{r['dataset']}/{r['method']}", 0.0,
+                        f"meanQ={r['mean']:.3f};p90={r['p90']:.3f};"
+                        f"p99={r['p99']:.3f};max={r['max']:.3f}"))
+    if "latency" in which:
+        from benchmarks import bench_latency
+        for r in bench_latency.run():
+            csv.append((f"latency/{r['dataset']}/{r['method']}",
+                        1e3 * r["ms_per_query"], "online-estimate"))
+    if "build" in which:
+        from benchmarks import bench_build
+        for r in bench_build.run():
+            csv.append((f"build/{r['dataset']}", 0.0,
+                        f"lsh={r['lsh_s']:.2f}s;table={r['table_s']:.2f}s;"
+                        f"pq={r['pq_s']:.2f}s;mlp={r['mlp_train_s']:.2f}s"))
+    if "adc" in which:
+        from benchmarks import bench_adc
+        for r in bench_adc.run():
+            csv.append((f"adc/d{r['dim']}", 1e3 * r["t_adc_ms"],
+                        f"speedup={r['speedup']:.2f}x"))
+    if "epsilon" in which:
+        from benchmarks import bench_epsilon
+        for r in bench_epsilon.run():
+            csv.append((f"epsilon/{r['eps']}", 1e3 * r["ms_per_query"],
+                        f"meanQ={r['mean_qerror']:.3f}"))
+    if "updates" in which:
+        from benchmarks import bench_updates
+        for r in bench_updates.run():
+            csv.append((f"updates/{r['dataset']}", 1e6 * r["t_update_s"],
+                        f"updatedQ={r['qerr_updated_mean']:.2f};"
+                        f"staticQ={r['qerr_static_mean']:.2f};"
+                        f"mlpFrozenQ={r['qerr_mlp_frozen_mean']:.2f};"
+                        f"rebuild_s={r['t_rebuild_s']:.2f}"))
+    if "roofline" in which:
+        from pathlib import Path
+
+        from benchmarks import bench_roofline
+        variants = [("baseline", "results/dryrun")]
+        if Path("results/dryrun_opt").exists():
+            variants.append(("optimized", "results/dryrun_opt"))
+        for tag, d in variants:
+            for mesh in ("single", "multi"):
+                for r in bench_roofline.run(d, mesh=mesh):
+                    name = f"roofline-{tag}/{r['arch']}/{r['shape']}/{mesh}"
+                    if "skipped" in r:
+                        csv.append((name, 0.0, "skipped"))
+                    else:
+                        csv.append((name,
+                                    1e6 * max(r["t_compute"], r["t_memory"],
+                                              r["t_collective"]),
+                                    f"dominant={r['dominant']};"
+                                    f"useful={r['useful_ratio']:.2f};"
+                                    f"mfu_bound={r['mfu_bound']:.3f};"
+                                    f"peak_gib={r['peak_gib']:.2f}"))
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

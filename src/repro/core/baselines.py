@@ -1,0 +1,110 @@
+"""Baselines the paper compares against (§3/§6).
+
+* ``sampling_estimate`` — uniform sampling (the paper's "Sampling 1%").
+* ``MLPEstimator``     — a reference-object learned estimator in the spirit
+  of MRCE/SimCard: features are distances from the query to R reference
+  objects (k-means centroids) plus tau; a small MLP regresses
+  log-cardinality. The full SimCard/MRCE systems (hundreds of local DNNs /
+  encoder-decoder featurizers, author code + GPUs) are out of scope offline —
+  this stand-in reproduces the *class characteristics* the paper argues
+  about: needs labeled training data, slow offline phase, degrades under
+  large-scale data updates (benchmarks/bench_updates.py, paper Table 5).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import pq as pqmod
+from repro.core.config import ProberConfig
+
+
+@partial(jax.jit, static_argnames=("n_samples",))
+def sampling_estimate(x, q, tau, key, n_samples: int):
+    n = x.shape[0]
+    idx = jax.random.choice(key, n, (n_samples,), replace=False)
+    d2 = jnp.sum((x[idx] - q[None]) ** 2, axis=-1)
+    frac = jnp.mean((d2 <= tau ** 2).astype(jnp.float32))
+    return frac * n
+
+
+# ------------------------------------------------------ learned baseline ---
+
+class MLPEstimator(NamedTuple):
+    refs: jax.Array        # (R, d) reference objects
+    w1: jax.Array
+    b1: jax.Array
+    w2: jax.Array
+    b2: jax.Array
+    w3: jax.Array
+    b3: jax.Array
+
+
+def _scale_of(refs):
+    # typical inter-reference distance — normalizes features so the MLP is
+    # dimension-scale invariant (unnormalized 960/1770-d inputs diverged)
+    d = jnp.sqrt(jnp.sum((refs[:, None] - refs[None]) ** 2, axis=-1))
+    return jnp.mean(d) + 1e-6
+
+
+def _features(refs, q, tau):
+    scale = _scale_of(refs)
+    d = jnp.sqrt(jnp.sum((refs - q[None]) ** 2, axis=-1)) / scale
+    t = tau / scale
+    return jnp.concatenate([d / (t + 1e-3), jnp.atleast_1d(t),
+                            jnp.atleast_1d(jnp.log1p(t))])
+
+
+def _fwd(m: MLPEstimator, q, tau):
+    f = _features(m.refs, q, tau)
+    h = jax.nn.relu(f @ m.w1 + m.b1)
+    h = jax.nn.relu(h @ m.w2 + m.b2)
+    return (h @ m.w3 + m.b3)[0]          # log1p(cardinality)
+
+
+def mlp_estimate(m: MLPEstimator, q, tau):
+    return jnp.expm1(jnp.clip(_fwd(m, q, tau), 0.0, 20.0))
+
+
+def fit_mlp(x, queries, taus, cards, key, n_refs: int = 16,
+            hidden: int = 64, epochs: int = 400, lr: float = 3e-3
+            ) -> MLPEstimator:
+    """queries (Q,d), taus (Q,T), cards (Q,T) exact labels."""
+    cfg = ProberConfig(pq_m=1, pq_kc=n_refs, pq_iters=8)
+    pq = pqmod.fit(x, cfg, key)               # k-means via the PQ machinery
+    refs = pq.centroids[0]                    # (R, d)
+    fdim = n_refs + 2
+    k1, k2, k3 = jax.random.split(key, 3)
+    m = MLPEstimator(
+        refs=refs,
+        w1=jax.random.normal(k1, (fdim, hidden)) * (1.0 / jnp.sqrt(fdim)),
+        b1=jnp.zeros((hidden,)),
+        w2=jax.random.normal(k2, (hidden, hidden)) * (1.0 / jnp.sqrt(hidden)),
+        b2=jnp.zeros((hidden,)),
+        w3=jax.random.normal(k3, (hidden, 1)) * (1.0 / jnp.sqrt(hidden)),
+        b3=jnp.zeros((1,)),
+    )
+    qf = queries.reshape(-1, queries.shape[-1])
+    flat_q = jnp.repeat(qf, taus.shape[1], axis=0)
+    flat_t = taus.reshape(-1)
+    flat_y = jnp.log1p(cards.reshape(-1).astype(jnp.float32))
+
+    def loss_fn(m):
+        pred = jax.vmap(lambda q, t: _fwd(m, q, t))(flat_q, flat_t)
+        return jnp.mean((pred - flat_y) ** 2)
+
+    @jax.jit
+    def step(m):
+        g = jax.grad(loss_fn)(m)
+        # clip for stability; refs are data, not trained
+        g = g._replace(refs=jnp.zeros_like(g.refs))
+        gn = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree_util.tree_leaves(g)))
+        sc = jnp.minimum(1.0, 10.0 / (gn + 1e-9))
+        return jax.tree_util.tree_map(lambda p, gg: p - lr * sc * gg, m, g)
+
+    for _ in range(epochs):
+        m = step(m)
+    return m

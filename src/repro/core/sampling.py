@@ -1,0 +1,47 @@
+"""Progressive-sampling confidence bounds (paper §4.5 + Appendix 8.2).
+
+With ``w`` samples, ``w'`` of which qualify, the empirical selectivity is
+``p_hat = w'/w`` and, with ``a = ln(1/delta)``,
+
+    mu_upper = (sqrt(p_hat + a/2w) + sqrt(a/2w))^2
+    mu_lower = max{0, (sqrt(p_hat + 2a/9w) - sqrt(a/2w))^2 - a/18w}
+
+bound the true selectivity ``p`` with confidence ``1 - delta`` each
+(Chernoff; Appendix 8.2 proves the upper side).
+
+Stopping conditions (paper eqns (1)/(2)):
+  (1) stop sampling this ring : mu_upper - p_hat <= eps  AND  p_hat - mu_lower <= eps
+  (2) stop probing entirely   : mu_upper < eps           (sets the PTF flag)
+
+Note: Alg. 2 line 26 prints ``mu_lower - p_hat <= eps`` which is trivially
+true (mu_lower <= p_hat); the prose formula (1) is the meaningful test and is
+what we implement.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mu_upper(p_hat, w, a):
+    w = jnp.maximum(w, 1e-9)
+    t = a / (2.0 * w)
+    return (jnp.sqrt(p_hat + t) + jnp.sqrt(t)) ** 2
+
+
+def mu_lower(p_hat, w, a):
+    w = jnp.maximum(w, 1e-9)
+    t = a / (2.0 * w)
+    inner = jnp.sqrt(p_hat + 2.0 * a / (9.0 * w)) - jnp.sqrt(t)
+    return jnp.maximum(0.0, inner ** 2 - a / (18.0 * w))
+
+
+def stop_sampling(p_hat, w, a, eps):
+    """Condition (1): the CI around p_hat is within eps on both sides."""
+    return ((mu_upper(p_hat, w, a) - p_hat) <= eps) & \
+           ((p_hat - mu_lower(p_hat, w, a)) <= eps)
+
+
+def stop_probing(p_hat, w, a, eps):
+    """Condition (2): even the upper bound of the selectivity is below eps —
+    further (more distant) rings cannot contribute meaningfully."""
+    return mu_upper(p_hat, w, a) < eps

@@ -1,0 +1,70 @@
+"""Dynamic data updates (paper §5, Alg. 7/8/9).
+
+* LSH (Alg. 7): hash new points with the *original* functions, re-normalise
+  ``W`` from the min/max of ALL raw projections (old + new — the retained
+  ``raw`` array makes this exact), re-quantise and rebuild the sorted-CSR
+  layout. The rebuild is one sort — on TPU that IS the hash-table update.
+* PQ (Alg. 8): assign new points to their nearest existing centroids and move
+  the affected centroids to the running mean (counts retained in the index).
+* Neighbor table (Alg. 9): see neighbors.update — new-vs-old / new-vs-new
+  blocks only.
+
+Shapes grow with N, so updates recompile once per growth step — expected and
+cheap relative to an index rebuild from scratch (benchmarked in
+benchmarks/bench_updates.py, mirroring paper Fig. 6/7).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lsh, pq as pqmod
+from repro.core.config import ProberConfig
+
+
+def update_lsh(index: lsh.LSHIndex, x_new: jax.Array,
+               cfg: ProberConfig) -> lsh.LSHIndex:
+    """Alg. 7. Returns an index over the concatenated dataset."""
+    params = index.params
+    raw_new = lsh.project(params, x_new)
+    raw_all = jnp.concatenate([index.raw, raw_new], axis=0)
+    # normalizeW over ALL raw hash values (old + new), then re-divide
+    w_new = lsh.normalize_w(raw_all, cfg.n_regions)
+    # offsets b are stored as a fraction of w (see lsh.project): rebase the
+    # additive offset from b*w_old to b*w_new before re-quantising
+    proj = raw_all - params.b * params.w          # pure x @ a
+    params = params._replace(w=w_new)
+    raw_adj = proj + params.b * w_new
+    codes = lsh.quantize(raw_adj, w_new)
+    n = raw_all.shape[0]
+    codes = codes.reshape(n, cfg.n_tables, cfg.n_funcs)
+    codes = jnp.swapaxes(codes, 0, 1)
+    order, bcodes, starts, sizes, nb = jax.vmap(lsh._build_table)(codes)
+    return lsh.LSHIndex(params=params, raw=raw_adj, codes=codes, order=order,
+                        bucket_codes=bcodes, bucket_starts=starts,
+                        bucket_sizes=sizes, n_buckets=nb)
+
+
+def update_pq(pq: pqmod.PQIndex, x_new: jax.Array) -> pqmod.PQIndex:
+    """Alg. 8: assign-new + incremental centroid means."""
+    m, kc = pq.m, pq.kc
+    xs = pqmod.split_subspaces(x_new, m)                  # (Nn, M, ds)
+    nn, _, ds = xs.shape
+    new_codes = pqmod.assign(pq.centroids, xs)            # (Nn, M)
+    seg = (new_codes + (jnp.arange(m, dtype=jnp.int32) * kc)[None, :]).reshape(-1)
+    sums = jax.ops.segment_sum(xs.reshape(nn * m, ds), seg, num_segments=m * kc)
+    cnts = jax.ops.segment_sum(jnp.ones((nn * m,), jnp.float32), seg,
+                               num_segments=m * kc)
+    sums = sums.reshape(m, kc, ds)
+    cnts = cnts.reshape(m, kc)
+    tot = pq.counts + cnts
+    # running mean: c' = (c*old_count + sum_new) / (old_count + new_count)
+    new_centroids = jnp.where(
+        tot[..., None] > 0,
+        (pq.centroids * pq.counts[..., None] + sums) / jnp.maximum(tot[..., None], 1.0),
+        pq.centroids)
+    codes = jnp.concatenate([pq.codes, new_codes], axis=0)
+    new_resid = pqmod.reconstruction_residual(new_centroids, new_codes, xs)
+    resid = jnp.concatenate([pq.resid, new_resid], axis=0)
+    return pqmod.PQIndex(centroids=new_centroids, codes=codes, counts=tot,
+                         resid=resid)

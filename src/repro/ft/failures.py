@@ -1,0 +1,83 @@
+"""Failure handling for the training driver (DESIGN.md §6).
+
+``FaultTolerantLoop`` wraps the step function: any step raising
+``WorkerFailure`` (injected in tests; on a real pod this is the surfaced
+XLA/runtime error or a missed heartbeat) triggers restore-from-latest-valid
+checkpoint and resumption. A ``HeartbeatMonitor`` tracks per-rank liveness
+the way a pod-level driver would; ranks missing ``timeout`` seconds are
+declared dead (tests drive this clock manually).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+class WorkerFailure(RuntimeError):
+    """A (simulated or real) device/host failure during a step."""
+
+
+class HeartbeatMonitor:
+    def __init__(self, n_ranks: int, timeout: float = 60.0):
+        self.timeout = timeout
+        self.last = {r: time.monotonic() for r in range(n_ranks)}
+
+    def beat(self, rank: int, now: float | None = None):
+        self.last[rank] = now if now is not None else time.monotonic()
+
+    def dead_ranks(self, now: float | None = None) -> list[int]:
+        now = now if now is not None else time.monotonic()
+        return [r for r, t in self.last.items() if now - t > self.timeout]
+
+
+class FaultTolerantLoop:
+    """Run steps with checkpoint/restart semantics.
+
+    step_fn(state, batch) -> (state, metrics); state is any pytree dict.
+    """
+
+    def __init__(self, step_fn: Callable, ckpt_manager, pipeline,
+                 save_every: int = 50, max_restarts: int = 8):
+        self.step_fn = step_fn
+        self.ckpt = ckpt_manager
+        self.pipeline = pipeline
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+        self.restarts = 0
+
+    def _restore(self, state):
+        got = self.ckpt.restore(state)
+        if got is None:
+            # no checkpoint yet: restart from the initial state / cursor 0
+            self.pipeline.load_state_dict({"seed": self.pipeline.seed,
+                                           "step": 0})
+            return state, 0
+        st, extra, step = got
+        if "pipeline" in extra:
+            self.pipeline.load_state_dict(extra["pipeline"])
+        return st, step
+
+    def run(self, state, n_steps: int, inject: Callable[[int], bool] | None = None):
+        """Returns (final_state, metrics_log). ``inject(step)`` true ->
+        simulate a worker failure at that step (before it commits)."""
+        log = []
+        step = 0
+        # resume if a checkpoint exists
+        state, step = self._restore(state)
+        while step < n_steps:
+            try:
+                if inject is not None and inject(step):
+                    raise WorkerFailure(f"injected failure at step {step}")
+                batch = self.pipeline.next()
+                state, metrics = self.step_fn(state, batch)
+                step += 1
+                log.append({"step": step, **{k: float(v) for k, v in metrics.items()}})
+                if step % self.save_every == 0 or step == n_steps:
+                    self.ckpt.save(step, state,
+                                   extra={"pipeline": self.pipeline.state_dict()})
+            except WorkerFailure:
+                self.restarts += 1
+                if self.restarts > self.max_restarts:
+                    raise
+                state, step = self._restore(state)
+        return state, log

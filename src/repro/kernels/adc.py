@@ -1,0 +1,56 @@
+"""PQ-ADC distance kernel (paper Alg. 5): ``dist[n] = Σ_m lut[m, codes[n,m]]``.
+
+TPU adaptation of the LUT gather (DESIGN.md §3): TPUs have no fast random
+gather, so the per-subspace lookup becomes a **compare-against-iota one-hot
+contraction** executed per subspace inside the kernel — an (bn, Kc) mask times
+the LUT row, accumulated over M via ``fori_loop``. The whole LUT
+(M×Kc×4B ≤ 32 KiB for M=32, Kc=256) lives in VMEM for the kernel's lifetime;
+codes stream through in (bn, M) int32 tiles.
+
+Grid: (N/bn,).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(codes_ref, lut_ref, out_ref):
+    codes = codes_ref[...]             # (bn, M) int32
+    lut = lut_ref[...]                 # (M, Kc) f32
+    bn = codes.shape[0]
+    m, kc = lut.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, kc), 1)
+
+    def body(j, acc):
+        onehot = (codes[:, j][:, None] == iota).astype(jnp.float32)  # (bn,Kc)
+        return acc + onehot @ lut[j, :]                              # matvec
+
+    acc = jax.lax.fori_loop(0, m, body, jnp.zeros((bn,), jnp.float32))
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def adc(codes: jax.Array, lut: jax.Array, *, bn: int = 512,
+        interpret: bool = True) -> jax.Array:
+    """codes (N, M) int32, lut (M, Kc) f32 → squared ADC distances (N,)."""
+    n, m = codes.shape
+    bn = min(bn, n)
+    pad_n = (-n) % bn
+    cp = jnp.pad(codes, ((0, pad_n), (0, 0)))
+    grid = (cp.shape[0] // bn,)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec(lut.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((cp.shape[0],), jnp.float32),
+        interpret=interpret,
+    )(cp, lut)
+    return out[:n]

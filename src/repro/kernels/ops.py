@@ -1,0 +1,37 @@
+"""Jit'd public wrappers over the Pallas kernels.
+
+On a TPU backend the kernels compile natively; on CPU (this container, and
+any unit-test environment) they execute via ``interpret=True``, which runs
+the kernel body in Python with identical semantics. ``KERNEL_INTERPRET``
+flips automatically off on TPU.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import adc as _adc
+from repro.kernels import hamming as _hamming
+from repro.kernels import l2dist as _l2dist
+from repro.kernels import lsh_hash as _lsh_hash
+
+KERNEL_INTERPRET = jax.default_backend() != "tpu"
+
+
+def lsh_hash(x, a, b, w, **kw):
+    kw.setdefault("interpret", KERNEL_INTERPRET)
+    return _lsh_hash.lsh_hash(x, a, b, w, **kw)
+
+
+def l2dist(x, q, **kw):
+    kw.setdefault("interpret", KERNEL_INTERPRET)
+    return _l2dist.l2dist(x, q, **kw)
+
+
+def adc(codes, lut, **kw):
+    kw.setdefault("interpret", KERNEL_INTERPRET)
+    return _adc.adc(codes, lut, **kw)
+
+
+def hamming(bucket_codes, qcode, **kw):
+    kw.setdefault("interpret", KERNEL_INTERPRET)
+    return _hamming.hamming(bucket_codes, qcode, **kw)

@@ -1,0 +1,23 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lsh_hash(x, a, b, w):
+    proj = x.astype(jnp.float32) @ a + b[None, :] * w[None, :]
+    return jnp.floor(proj / w[None, :]).astype(jnp.int32)
+
+
+def l2dist(x, q):
+    return jnp.sum((x[:, None, :] - q[None, :, :]) ** 2, axis=-1)
+
+
+def adc(codes, lut):
+    m = lut.shape[0]
+    return jnp.sum(lut[jnp.arange(m), codes], axis=-1)
+
+
+def hamming(bucket_codes, qcode):
+    return jnp.sum((bucket_codes != qcode[None, :]).astype(jnp.int32), axis=-1)

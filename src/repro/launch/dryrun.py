@@ -1,0 +1,291 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) on the production
+meshes and extract memory / cost / collective analysis (EXPERIMENTS.md
+§Dry-run, §Roofline).
+
+The two lines above MUST precede any jax import — jax locks the device count
+on first init. Everything below is ShapeDtypeStruct-abstract: no tensor of
+any full-size architecture is ever allocated.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--out-dir results/dryrun]
+
+``--all`` fans out one subprocess per cell (isolates XLA compile state and
+lets a failed cell fail alone); each cell writes a JSON record.
+"""
+import argparse
+import dataclasses
+import json
+import subprocess
+import sys
+import time
+from pathlib import Path
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.base import ModelConfig
+from repro.optim import adamw
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.sharding import rules
+from repro.sharding.act import activation_sharding
+from repro.train.step import make_train_step
+from repro.utils import hlo as hlo_util
+from repro.utils import roofline
+
+
+def _named(mesh, tree_of_specs):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_of_specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def lower_cell(cfg: ModelConfig, shape: str, mesh, profile: str = "fsdp_tp",
+               unroll: bool = True, opt_overrides: dict | None = None):
+    """Lower + compile one cell; returns (compiled, lowered, seconds)."""
+    info = S.SHAPES[shape]
+    kind = info["kind"]
+    params_abs = S.param_specs_for(cfg)
+    pspecs = _named(mesh, rules.param_specs(params_abs, mesh, profile))
+    batch_abs = S.batch_specs_for(cfg, shape)
+    bspecs = _named(mesh, rules.batch_specs(batch_abs, mesh))
+    # activation constraints: batch over the data-like axes that divide it
+    act_axes = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    while act_axes and info["batch"] % _prod(mesh, act_axes) != 0:
+        act_axes = act_axes[1:]
+    t0 = time.time()
+    act = activation_sharding(mesh, act_axes)
+
+    if kind == "train":
+        opt_abs = jax.eval_shape(adamw.init, params_abs)
+        # optimizer m/v mirror the param tree specs; step is replicated
+        ospecs = {"m": pspecs, "v": pspecs,
+                  "step": NamedSharding(mesh, P())}
+        step = make_train_step(cfg, adamw.AdamWConfig(), unroll_layers=unroll,
+                               **(opt_overrides or {}))
+        rep = NamedSharding(mesh, P())
+        jitted = jax.jit(step,
+                         in_shardings=(pspecs, ospecs, bspecs),
+                         out_shardings=(pspecs, ospecs,
+                                        {"lr": rep, "grad_norm": rep, "loss": rep}),
+                         donate_argnums=(0, 1))
+        with act:
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+    elif kind == "prefill":
+        fn = make_prefill_step(cfg, unroll_layers=unroll)
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        dp_axis = dp if len(dp) > 1 else dp[0]
+        vshard = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        out = NamedSharding(mesh, P(dp_axis, vshard))
+        jitted = jax.jit(fn, in_shardings=(pspecs, bspecs), out_shardings=out)
+        with act:
+            lowered = jitted.lower(params_abs, batch_abs)
+    else:  # decode
+        # Serving policy (§Perf iteration 3): params in bf16 (production
+        # serving precision — halves weight reads/gathers) and, when the
+        # model-sharded copy fits HBM alongside the cache, profile "tp"
+        # (weights replicated over data -> zero per-step FSDP re-gathers).
+        import jax.numpy as jnp
+        params_abs = jax.tree_util.tree_map(
+            lambda t: jax.ShapeDtypeStruct(
+                t.shape, jnp.bfloat16 if t.dtype == jnp.float32 else t.dtype),
+            params_abs)
+        per_dev_weight_gib = cfg.param_count() * 2 / mesh.shape["model"] / 2**30
+        if per_dev_weight_gib <= 4.0:
+            profile = "tp"
+        pspecs = _named(mesh, rules.param_specs(params_abs, mesh, profile))
+        fn = make_decode_step(cfg, unroll_layers=unroll)
+        cache_abs = S.cache_specs_for(cfg, shape)
+        cspecs = _named(mesh, rules.cache_specs(cache_abs, mesh))
+        dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+        b = info["batch"]
+        while dp and b % _prod(mesh, dp) != 0:
+            dp = dp[1:]
+        dp_axis = dp if len(dp) > 1 else (dp[0] if dp else None)
+        vshard = "model" if cfg.vocab % mesh.shape["model"] == 0 else None
+        out_logits = NamedSharding(mesh, P(dp_axis, vshard))
+        jitted = jax.jit(fn,
+                         in_shardings=(pspecs, cspecs, bspecs["tokens"]),
+                         out_shardings=(out_logits, cspecs),
+                         donate_argnums=(1,))
+        with act:
+            lowered = jitted.lower(params_abs, cache_abs, batch_abs["tokens"])
+
+    compiled = lowered.compile()
+    return compiled, lowered, time.time() - t0
+
+
+def _prod(mesh, axes):
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def _delta_correct(cfg: ModelConfig, shape: str, mesh, profile: str) -> dict:
+    """Per-layer FLOPs/bytes via the delta method (DESIGN.md §7).
+
+    ``cost_analysis`` counts a ``lax.scan`` body once, so the full-L scan-mode
+    compile undercounts per-layer work by ~L×. Recover the true totals by
+    compiling the SAME cell at two small layer counts with the scan unrolled:
+
+        per_unit   = (cost(k2) - cost(k1)) / (k2 - k1)      [unit = layer/group]
+        corrected  = cost(k1) + per_unit * (units_full - units_k1)
+
+    rglru varies in 3-block groups (tail counted as 2/3 group); whisper
+    varies enc+dec together. The rwkv6 inner time-scan stays undercounted
+    (<2% of layer FLOPs — the recurrence is elementwise next to the
+    projections; DESIGN.md §7).
+    """
+    if cfg.family == "rglru":
+        per = cfg.attn_every or 3
+        k1, k2 = per, 2 * per
+        mk = lambda k: cfg.replace(n_layers=k)
+        u1, u2 = 1.0, 2.0
+        units_full = cfg.n_layers / per
+    elif cfg.family == "whisper":
+        k1, k2 = 1, 2
+        mk = lambda k: cfg.replace(n_layers=k, enc_layers=k)
+        u1, u2 = 1.0, 2.0
+        units_full = float(cfg.n_layers)
+    else:
+        k1, k2 = 1, 2
+        mk = lambda k: cfg.replace(n_layers=k)
+        u1, u2 = 1.0, 2.0
+        units_full = float(cfg.n_layers)
+
+    costs = []
+    for k in (k1, k2):
+        comp, _, _ = lower_cell(mk(k), shape, mesh, profile, unroll=True)
+        ca = comp.cost_analysis() or {}
+        costs.append((float(ca.get("flops", 0.0)),
+                      float(ca.get("bytes accessed", 0.0))))
+    (f1, b1), (f2, b2) = costs
+    per_f = (f2 - f1) / (u2 - u1)
+    per_b = (b2 - b1) / (u2 - u1)
+    return {"flops": f1 + per_f * (units_full - u1),
+            "bytes": b1 + per_b * (units_full - u1),
+            "per_unit_flops": per_f, "per_unit_bytes": per_b,
+            "raw_small": costs}
+
+
+def analyze(cfg: ModelConfig, shape: str, compiled, chips: int,
+            seconds: float, corrected: dict | None = None) -> dict:
+    ca = compiled.cost_analysis() or {}
+    ma = compiled.memory_analysis()
+    text = compiled.as_text()
+    coll = hlo_util.collective_bytes(text)
+    info = S.SHAPES[shape]
+    mf = roofline.model_flops_for(cfg, info)
+    # delta-corrected totals can only be >= the raw (scan-body-once) values;
+    # clamp guards tiny-model compile noise producing negative deltas
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    if corrected:
+        flops = max(corrected["flops"], flops)
+        byts = max(corrected["bytes"], byts)
+    rf = roofline.make(flops, byts, float(coll["total"]), chips, mf)
+    mem = {k: int(getattr(ma, k, 0)) for k in
+           ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "peak_memory_in_bytes",
+            "alias_size_in_bytes")}
+    return {
+        "arch": cfg.name, "shape": shape, "chips": chips,
+        "compile_s": round(seconds, 1),
+        "memory": mem,
+        "cost_raw": {"flops": float(ca.get("flops", 0.0)),
+                     "bytes_accessed": float(ca.get("bytes accessed", 0.0))},
+        "cost_corrected": corrected,
+        "collectives": coll,
+        "roofline": rf.to_dict(),
+        "while_trip_counts": hlo_util.while_trip_counts(text)[:16],
+    }
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, out_dir: Path,
+             profile: str, unroll: bool) -> dict:
+    cfg = configs.get_config(arch)
+    ok, why = S.cell_supported(cfg, shape)
+    rec_path = out_dir / f"{arch}__{shape}__{mesh_kind}.json"
+    if not ok:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+               "skipped": why}
+        rec_path.write_text(json.dumps(rec, indent=1))
+        print(f"SKIP {arch} {shape}: {why}")
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.size
+    compiled, lowered, secs = lower_cell(cfg, shape, mesh, profile, unroll)
+    corrected = None
+    if not unroll:   # scan-mode full compile: apply the delta correction
+        corrected = _delta_correct(cfg, shape, mesh, profile)
+    rec = analyze(cfg, shape, compiled, chips, secs, corrected)
+    rec["mesh"] = mesh_kind
+    rec["profile"] = profile
+    rec["unrolled"] = unroll
+    rec_path.write_text(json.dumps(rec, indent=1))
+    r = rec["roofline"]
+    print(f"OK {arch} {shape} {mesh_kind}: compile={secs:.0f}s "
+          f"dominant={r['dominant']} t=({r['t_compute_s']:.2e},"
+          f"{r['t_memory_s']:.2e},{r['t_collective_s']:.2e})s "
+          f"useful={r['useful_ratio']:.2f} "
+          f"peak_mem={rec['memory']['peak_memory_in_bytes']/2**30:.2f}GiB")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=configs.ARCHS)
+    ap.add_argument("--shape", choices=list(S.SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--profile", default="fsdp_tp", choices=["tp", "fsdp_tp"])
+    ap.add_argument("--unroll", action="store_true",
+                    help="unroll the layer scan in the FULL compile (heavy; "
+                         "default uses scan + delta-method correction)")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="skip cells whose JSON already exists")
+    args = ap.parse_args()
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    if args.all:
+        failures = []
+        for arch in configs.ARCHS:
+            for shape in S.SHAPES:
+                for mk in meshes:
+                    rec = out_dir / f"{arch}__{shape}__{mk}.json"
+                    if args.resume and rec.exists():
+                        continue
+                    cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                           "--arch", arch, "--shape", shape, "--mesh", mk,
+                           "--profile", args.profile,
+                           "--out-dir", str(out_dir)]
+                    if args.unroll:
+                        cmd.append("--unroll")
+                    r = subprocess.run(cmd)
+                    if r.returncode != 0:
+                        failures.append((arch, shape, mk))
+        if failures:
+            print("FAILED cells:", failures)
+            sys.exit(1)
+        print("all cells OK")
+        return
+
+    assert args.arch and args.shape, "--arch/--shape or --all required"
+    for mk in meshes:
+        run_cell(args.arch, args.shape, mk, out_dir, args.profile,
+                 args.unroll)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every (arch × shape) cell —
+weak-type-correct, shardable, no device allocation.
+
+Shape grid (assignment):
+    train_4k     seq=4096   global_batch=256   (train_step)
+    prefill_32k  seq=32768  global_batch=32    (prefill)
+    decode_32k   seq=32768  global_batch=128   (decode: 1 token, KV cache=seq)
+    long_500k    seq=524288 global_batch=1     (decode; sub-quadratic archs only)
+
+Modality frontends are stubs per the assignment: pixtral gets precomputed
+patch/token embeddings (B, S, D); whisper gets precomputed frame embeddings.
+Whisper train/decode use dec_len decoder tokens and a 1500-frame (native)
+cross-attention span for decode cells.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_family
+from repro.models.base import ModelConfig
+
+SHAPES = {
+    "train_4k":    dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k":  dict(seq=32768, batch=128, kind="decode"),
+    "long_500k":   dict(seq=524288, batch=1, kind="decode"),
+}
+
+SUBQUADRATIC = {"rglru", "rwkv6"}
+_WHISPER_NATIVE_ENC = 1504   # ~30 s of audio frames, padded to a lane multiple
+
+
+def cell_supported(cfg: ModelConfig, shape: str) -> tuple[bool, str]:
+    if shape == "long_500k" and cfg.family not in SUBQUADRATIC:
+        return False, ("full-attention architecture: a 524288-token decode "
+                       "needs sub-quadratic attention (skip noted in DESIGN.md §5)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_for(cfg: ModelConfig, shape: str):
+    """ShapeDtypeStructs for the *data* inputs of the cell."""
+    info = SHAPES[shape]
+    s, b, kind = info["seq"], info["batch"], info["kind"]
+    tok = jnp.int32
+    act = jnp.bfloat16
+    if kind == "train":
+        if cfg.family == "whisper":
+            return {"frames": _sds((b, s, cfg.d_model), act),
+                    "tokens": _sds((b, cfg.dec_len), tok),
+                    "labels": _sds((b, cfg.dec_len), tok)}
+        if cfg.input_mode == "embeds":
+            return {"embeds": _sds((b, s, cfg.d_model), act),
+                    "labels": _sds((b, s), tok)}
+        return {"tokens": _sds((b, s), tok), "labels": _sds((b, s), tok)}
+    if kind == "prefill":
+        if cfg.family == "whisper":
+            return {"frames": _sds((b, s, cfg.d_model), act)}
+        if cfg.input_mode == "embeds":
+            return {"embeds": _sds((b, s, cfg.d_model), act)}
+        return {"tokens": _sds((b, s), tok)}
+    # decode: tokens only; the cache comes from cache_specs_for
+    return {"tokens": _sds((b,), tok)}
+
+
+def cache_specs_for(cfg: ModelConfig, shape: str):
+    """Abstract KV-cache / recurrent-state for decode cells (no allocation)."""
+    info = SHAPES[shape]
+    s, b = info["seq"], info["batch"]
+    fam = get_family(cfg)
+    kw = {}
+    if cfg.family == "whisper":
+        kw["enc_len"] = _WHISPER_NATIVE_ENC
+    return jax.eval_shape(lambda: fam.init_cache(cfg, b, s, **kw))
+
+
+def param_specs_for(cfg: ModelConfig):
+    """Abstract params via eval_shape — zero allocation at any size."""
+    fam = get_family(cfg)
+    key = jax.ShapeDtypeStruct((2,), jnp.uint32)
+    return jax.eval_shape(lambda k: fam.init(k, cfg), key)

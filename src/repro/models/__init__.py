@@ -1,0 +1,18 @@
+"""Model-family registry: family name -> module with the uniform API
+(init / forward / loss_fn / init_cache / decode_step)."""
+from __future__ import annotations
+
+from repro.models import moe, rglru, rwkv6, transformer, whisper
+from repro.models.base import ModelConfig
+
+FAMILIES = {
+    "dense": transformer,
+    "moe": moe,
+    "rglru": rglru,
+    "rwkv6": rwkv6,
+    "whisper": whisper,
+}
+
+
+def get_family(cfg: ModelConfig):
+    return FAMILIES[cfg.family]

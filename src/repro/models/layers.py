@@ -1,0 +1,373 @@
+"""Shared pure-JAX layers: norms, RoPE, GQA attention (full / windowed /
+cached), SwiGLU MLP, embeddings.
+
+Conventions:
+  * params are nested dicts of jnp arrays; layer-stacked weights carry a
+    leading L axis and are consumed via ``lax.scan``.
+  * compute dtype is cfg.dtype (bf16); params and reductions stay f32.
+  * attention uses chunked sliding-window when ``window`` is set — exact for
+    window <= chunk and sub-quadratic in sequence length.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.base import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------- norms ----
+
+def norm_init(cfg: ModelConfig, dim: int):
+    if cfg.norm == "layernorm_nonparam":
+        return {}
+    p = {"scale": jnp.ones((dim,), jnp.float32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((dim,), jnp.float32)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "rmsnorm":
+        xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+        return (xf * p["scale"]).astype(x.dtype)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    xf = (xf - mean) * jax.lax.rsqrt(var + eps)
+    if cfg.norm == "layernorm_nonparam":     # OLMo: non-parametric LN
+        return xf.astype(x.dtype)
+    return (xf * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ----------------------------------------------------------------- rope ----
+
+def rope_freqs(cfg: ModelConfig, positions: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """positions (...,) -> cos/sin of shape (..., hd/2)."""
+    hd = cfg.hd
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, hd, 2) / hd))
+    ang = positions[..., None].astype(jnp.float32) * inv[None, :]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x (..., S, H, hd); cos/sin (..., S, hd/2) broadcast over heads."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s],
+                           axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------ attention ----
+
+def attn_init(key, cfg: ModelConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = 1.0 / np.sqrt(d)
+    p = {
+        "wq": jax.random.normal(k1, (d, h * hd), jnp.float32) * scale,
+        "wk": jax.random.normal(k2, (d, kv * hd), jnp.float32) * scale,
+        "wv": jax.random.normal(k3, (d, kv * hd), jnp.float32) * scale,
+        "wo": jax.random.normal(k4, (h * hd, d), jnp.float32) * scale,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((kv * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((kv * hd,), jnp.float32)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _qk_rmsnorm(x, scale, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    xf = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (xf * scale).astype(x.dtype)
+
+
+def qkv_project(p, x, cfg: ModelConfig, positions: jax.Array):
+    """x (B, S, D) -> q (B, S, H, hd), k/v (B, S, KV, hd) with RoPE applied."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = x @ p["wq"].astype(x.dtype)
+    k = x @ p["wk"].astype(x.dtype)
+    v = x @ p["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+        k = k + p["bk"].astype(x.dtype)
+        v = v + p["bv"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, kv, hd)
+    v = v.reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = _qk_rmsnorm(q, p["q_norm"])
+        k = _qk_rmsnorm(k, p["k_norm"])
+    if cfg.rope_theta > 0:
+        cos, sin = rope_freqs(cfg, positions)
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ModelConfig):
+    """q (B,Sq,H,hd), k/v (B,Sk,KV,hd), mask broadcastable (B,1,Sq,Sk).
+
+    Grouped-query form: q is reshaped to (B,Sq,KV,rep,hd) and contracted
+    against the UN-repeated K/V — ``jnp.repeat`` materialized rep× copies of
+    the cache and forced full-cache all-gathers under SPMD (2×13.4 GiB/layer
+    measured on qwen2-7b decode; EXPERIMENTS.md §Perf iteration 2).
+    """
+    h, kv = cfg.n_heads, cfg.n_kv
+    rep = h // kv
+    b, sq = q.shape[:2]
+    qg = q.reshape(b, sq, kv, rep, cfg.hd)
+    scores = jnp.einsum("bqgrd,bkgd->bgrqk", qg, k).astype(jnp.float32)
+    scores = scores / np.sqrt(cfg.hd)
+    scores = jnp.where(mask[:, :, None], scores, -1e30)   # (B,g,r,Sq,Sk)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrqk,bkgd->bqgrd", probs, v)
+    return out.reshape(b, sq, h * cfg.hd)
+
+
+def causal_attention(p, x, cfg: ModelConfig, positions=None, causal=True):
+    """Full (quadratic) attention over x (B, S, D)."""
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = qkv_project(p, x, cfg, positions)
+    qpos = jnp.arange(s)
+    if causal:
+        mask = (qpos[:, None] >= qpos[None, :])[None, None]
+    else:
+        mask = jnp.ones((1, 1, s, s), bool)
+    out = _sdpa(q, k, v, mask, cfg)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def chunked_causal_attention(p, x, cfg: ModelConfig, positions=None,
+                             block: int = 512):
+    """Flash-style causal attention: online softmax over KV blocks.
+
+    Never materializes the (S, S) score matrix — scores exist one
+    (B, S, H, block) tile at a time inside a ``lax.scan`` over KV blocks
+    (with an early full-skip mask for blocks entirely in the causal
+    future). Enabled per-config with ``chunked_attn`` (§Perf addendum).
+    """
+    b, s, _ = x.shape
+    if s <= block:
+        return causal_attention(p, x, cfg, positions)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = qkv_project(p, x, cfg, positions)
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    rep = h // kv
+    pad = (-s) % block
+    sp = s + pad
+    kp = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nblk = sp // block
+    kb = jnp.moveaxis(kp.reshape(b, nblk, block, kv, hd), 1, 0)
+    vb = jnp.moveaxis(vp.reshape(b, nblk, block, kv, hd), 1, 0)
+    qg = q.reshape(b, s, kv, rep, hd)
+    qpos = jnp.arange(s)
+    scale = 1.0 / np.sqrt(hd)
+
+    def body(carry, xs):
+        m, l, acc = carry                       # (B,S,KV,rep) ×2, (…,hd)
+        kblk, vblk, bidx = xs
+        kpos = bidx * block + jnp.arange(block)
+        mask = (qpos[:, None] >= kpos[None, :])          # (S, block)
+        sc = jnp.einsum("bqgrd,bkgd->bqgrk", qg, kblk).astype(jnp.float32)
+        sc = sc * scale
+        sc = jnp.where(mask[None, :, None, None, :], sc, -1e30)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p_blk = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p_blk, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqgrk,bkgd->bqgrd", p_blk.astype(qg.dtype), vblk).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, s, kv, rep), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, s, kv, rep), jnp.float32)
+    a0 = jnp.zeros((b, s, kv, rep, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kb, vb, jnp.arange(nblk)))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
+    out = out.reshape(b, s, h * hd)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def windowed_attention(p, x, cfg: ModelConfig, positions=None):
+    """Chunked sliding-window attention, exact for window <= chunk.
+
+    S is padded to a multiple of W; each chunk attends to itself and the
+    previous chunk under the combined causal+window mask. Memory/compute is
+    O(S · 2W) instead of O(S²).
+    """
+    w = cfg.window
+    b, s, d = x.shape
+    if s <= w:   # small sequences: plain causal attention
+        return causal_attention(p, x, cfg, positions)
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q, k, v = qkv_project(p, x, cfg, positions)
+    pad = (-s) % w
+    sp = s + pad
+    nchunk = sp // w
+
+    def pad_t(t):
+        return jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    qc = pad_t(q).reshape(b, nchunk, w, cfg.n_heads, cfg.hd)
+    kc = pad_t(k).reshape(b, nchunk, w, cfg.n_kv, cfg.hd)
+    vc = pad_t(v).reshape(b, nchunk, w, cfg.n_kv, cfg.hd)
+    # keys for chunk i = chunks [i-1, i]
+    k_prev = jnp.concatenate([jnp.zeros_like(kc[:, :1]), kc[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vc[:, :1]), vc[:, :-1]], axis=1)
+    kk = jnp.concatenate([k_prev, kc], axis=2)       # (B, C, 2W, KV, hd)
+    vv = jnp.concatenate([v_prev, vc], axis=2)
+    qpos = jnp.arange(w)                             # within-chunk query pos
+    kpos = jnp.arange(2 * w) - w                     # relative key pos
+    rel = qpos[:, None] - kpos[None, :]              # how far back key is
+    mask = (rel >= 0) & (rel < w)                    # causal + window
+    first_chunk_mask = kpos[None, :] >= 0            # chunk 0 has no prev
+    cm = jnp.broadcast_to(mask, (nchunk, w, 2 * w))
+    cm = cm.at[0].set(mask & first_chunk_mask)
+    h, kv = cfg.n_heads, cfg.n_kv
+    rep = h // kv
+    if rep > 1:
+        kk = jnp.repeat(kk, rep, axis=3)
+        vv = jnp.repeat(vv, rep, axis=3)
+    scores = jnp.einsum("bcqhd,bckhd->bchqk", qc, kk).astype(jnp.float32)
+    scores = scores / np.sqrt(cfg.hd)
+    scores = jnp.where(cm[None, :, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bchqk,bckhd->bcqhd", probs, vv)
+    out = out.reshape(b, sp, h * cfg.hd)[:, :s]
+    return out @ p["wo"].astype(x.dtype)
+
+
+def kv_quantize(x):
+    """(..., hd) -> int8 payload + per-token f32 scale (beyond-paper: int8
+    KV cache — halves decode HBM traffic and makes the qwen1.5-32b 32k MHA
+    cache fit a v5e (21.5 -> 10.8 GiB/device; EXPERIMENTS.md §Perf)."""
+    s = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0 + 1e-8
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / s[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, s
+
+
+def kv_dequantize(q, s, dtype):
+    return q.astype(dtype) * s[..., None].astype(dtype)
+
+
+def cached_decode_attention_q8(p, x, ck, cv, ks, vs, pos, cfg: ModelConfig):
+    """Decode against an int8-quantized cache. ck/cv (B,S,KV,hd) int8,
+    ks/vs (B,S,KV) f32. Returns (out, ck, cv, ks, vs)."""
+    b = x.shape[0]
+    s_max = ck.shape[1]
+    write = pos % s_max if cfg.window else pos
+    rope_pos = jnp.full((b, 1), pos)
+    q, k, v = qkv_project(p, x, cfg, rope_pos)
+    k8, k_s = kv_quantize(k)
+    v8, v_s = kv_quantize(v)
+    ck = jax.lax.dynamic_update_slice_in_dim(ck, k8, write, axis=1)
+    cv = jax.lax.dynamic_update_slice_in_dim(cv, v8, write, axis=1)
+    ks = jax.lax.dynamic_update_slice_in_dim(ks, k_s, write, axis=1)
+    vs = jax.lax.dynamic_update_slice_in_dim(vs, v_s, write, axis=1)
+    kf = kv_dequantize(ck, ks, q.dtype)
+    vf = kv_dequantize(cv, vs, q.dtype)
+    kpos = jnp.arange(s_max)
+    mask = (kpos <= pos)[None, None, None, :]
+    out = _sdpa(q, kf, vf, mask, cfg)
+    return out @ p["wo"].astype(x.dtype), ck, cv, ks, vs
+
+
+def cached_decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig):
+    """One-token decode against a (B, S_max, KV, hd) cache.
+
+    Returns (out (B, 1, D), new_k, new_v). ``pos`` is the write position.
+    If cfg.window > 0 the cache is a ring buffer of size S_max (= window).
+    """
+    b = x.shape[0]
+    s_max = cache_k.shape[1]
+    write = pos % s_max if cfg.window else pos
+    rope_pos = jnp.full((b, 1), pos)
+    q, k, v = qkv_project(p, x, cfg, rope_pos)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), write, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), write, axis=1)
+    kpos = jnp.arange(s_max)
+    # slots written so far; for the ring buffer (window mode) every slot is
+    # valid once pos >= s_max and they are exactly the last s_max tokens —
+    # attention is permutation-invariant over keys so ring order is fine
+    mask = (kpos <= pos)[None, None, None, :]
+    out = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask, cfg)
+    return out @ p["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------- mlp ------
+
+def mlp_init(key, cfg: ModelConfig, d: Optional[int] = None,
+             ff: Optional[int] = None):
+    d = d or cfg.d_model
+    ff = ff or cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / np.sqrt(d)
+    s_out = 1.0 / np.sqrt(ff)
+    return {
+        "wi": jax.random.normal(k1, (d, ff), jnp.float32) * s_in,
+        "wg": jax.random.normal(k2, (d, ff), jnp.float32) * s_in,
+        "wo": jax.random.normal(k3, (ff, d), jnp.float32) * s_out,
+    }
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    """SwiGLU (qwen/olmo/pixtral families) — silu(x wg) * (x wi) wo."""
+    g = jax.nn.silu(x @ p["wg"].astype(x.dtype))
+    h = x @ p["wi"].astype(x.dtype)
+    return (g * h) @ p["wo"].astype(x.dtype)
+
+
+# ------------------------------------------------------------ embedding ----
+
+def embed_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": jax.random.normal(k1, (cfg.vocab, cfg.d_model),
+                                        jnp.float32) * 0.02}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(k2, (cfg.d_model, cfg.vocab),
+                                         jnp.float32) * 0.02
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    return p["embedding"][tokens].astype(cdtype(cfg))
+
+
+def unembed(p, x, cfg: ModelConfig):
+    w = p["lm_head"] if not cfg.tie_embeddings else p["embedding"].T
+    return (x @ w.astype(x.dtype)).astype(jnp.float32)
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Mean token CE in f32. logits (B, S, V), labels (B, S) int32."""
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None],
+                             axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        return jnp.mean(nll)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)

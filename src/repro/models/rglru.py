@@ -1,0 +1,239 @@
+"""RecurrentGemma / Griffin hybrid (recurrentgemma-9b): repeating
+(recurrent, recurrent, local-attention) blocks with a GeGLU MLP after each
+temporal-mixing block.
+
+The RG-LRU linear recurrence ``h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (i_t ⊙ x_t)``
+is evaluated with ``lax.associative_scan`` (parallel prefix — O(log S) depth,
+TPU friendly) for train/prefill and as a single-step update for decode. Local
+attention uses the chunked sliding-window kernel from layers.py, so the whole
+architecture is sub-quadratic and runs the ``long_500k`` cell.
+
+Params: groups of 3 blocks stacked (G, ...) and a recurrent tail (for
+n_layers % 3 != 0), both consumed via ``lax.scan``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.base import ModelConfig
+from repro.sharding.act import constrain
+
+_C = 8.0   # RG-LRU decay sharpness constant (Griffin)
+
+
+def _w(cfg: ModelConfig) -> int:
+    return cfg.lru_width or cfg.d_model
+
+
+# ------------------------------------------------------- recurrent block ---
+
+def rec_init(key, cfg: ModelConfig):
+    d, w = cfg.d_model, _w(cfg)
+    ks = jax.random.split(key, 6)
+    s_d, s_w = 1.0 / np.sqrt(d), 1.0 / np.sqrt(w)
+    return {
+        "w_in": jax.random.normal(ks[0], (d, w), jnp.float32) * s_d,
+        "w_gate": jax.random.normal(ks[1], (d, w), jnp.float32) * s_d,
+        "w_out": jax.random.normal(ks[2], (w, d), jnp.float32) * s_w,
+        "conv_w": jax.random.normal(ks[3], (cfg.conv_width, w), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((w,), jnp.float32),
+        "lru_lambda": jax.random.uniform(ks[4], (w,), jnp.float32, 0.1, 0.9),
+        "w_a": jax.random.normal(ks[5], (w, w), jnp.float32) * s_w,
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": jax.random.normal(ks[0], (w, w), jnp.float32) * s_w,
+        "b_x": jnp.zeros((w,), jnp.float32),
+    }
+
+
+def _causal_conv(p, x):
+    """Per-channel causal conv, width cw. x (B, S, W)."""
+    cw = p["conv_w"].shape[0]
+    out = jnp.zeros_like(x)
+    for j in range(cw):
+        shifted = jnp.pad(x, ((0, 0), (j, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted * p["conv_w"][cw - 1 - j][None, None, :].astype(x.dtype)
+    return out + p["conv_b"].astype(x.dtype)
+
+
+def _lru_coeffs(p, u):
+    """u (..., W) conv output -> (a, b) recurrence coefficients (f32)."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"] + p["b_a"])
+    i = jax.nn.sigmoid(uf @ p["w_x"] + p["b_x"])
+    log_a = -_C * jax.nn.softplus(p["lru_lambda"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * uf)
+    return a, b
+
+
+def rec_fwd(p, x, cfg: ModelConfig):
+    """Full-sequence recurrent block. x (B, S, D) -> (B, S, D)."""
+    u = _causal_conv(p, x @ p["w_in"].astype(x.dtype))
+    a, b = _lru_coeffs(p, u)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    gate = jax.nn.gelu(x @ p["w_gate"].astype(x.dtype))
+    return (h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+
+
+def rec_step(p, x, state, cfg: ModelConfig):
+    """Single-token step. x (B, 1, D); state {h (B,W), conv (B,cw-1,W)}."""
+    xi = x[:, 0] @ p["w_in"].astype(x.dtype)                  # (B, W)
+    cw = cfg.conv_width
+    hist = jnp.concatenate([state["conv"], xi[:, None]], axis=1)  # (B, cw, W)
+    u = jnp.einsum("bcw,cw->bw", hist.astype(jnp.float32), p["conv_w"])
+    u = u + p["conv_b"]
+    a, b = _lru_coeffs(p, u)
+    h = a * state["h"] + b                                    # (B, W)
+    gate = jax.nn.gelu(x[:, 0] @ p["w_gate"].astype(x.dtype))
+    out = (h.astype(x.dtype) * gate) @ p["w_out"].astype(x.dtype)
+    new_state = {"h": h, "conv": hist[:, 1:].astype(state["conv"].dtype)}
+    return out[:, None], new_state
+
+
+# --------------------------------------------------------------- blocks ----
+
+def _block_init(key, cfg: ModelConfig, kind: str):
+    k1, k2 = jax.random.split(key)
+    mix = rec_init(k1, cfg) if kind == "rec" else L.attn_init(k1, cfg)
+    return {
+        "mix": mix,
+        "mlp": L.mlp_init(k2, cfg),
+        "ln1": L.norm_init(cfg, cfg.d_model),
+        "ln2": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+def _block_fwd(p, x, cfg: ModelConfig, kind: str):
+    x = constrain(x)
+    h = L.apply_norm(p["ln1"], x, cfg)
+    if kind == "rec":
+        x = x + rec_fwd(p["mix"], h, cfg)
+    else:
+        x = x + L.windowed_attention(p["mix"], h, cfg)
+    x = x + L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], x, cfg), cfg)
+    return constrain(x)
+
+
+def n_groups(cfg: ModelConfig) -> tuple[int, int]:
+    per = cfg.attn_every or 3
+    return cfg.n_layers // per, cfg.n_layers % per
+
+
+def init(key, cfg: ModelConfig):
+    g, tail = n_groups(cfg)
+    keys = jax.random.split(key, 2)
+    gks = jax.random.split(keys[0], g)
+
+    def group_init(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"rec1": _block_init(k1, cfg, "rec"),
+                "rec2": _block_init(k2, cfg, "rec"),
+                "attn": _block_init(k3, cfg, "attn")}
+
+    params = {
+        "embed": L.embed_init(keys[1], cfg),
+        "groups": jax.vmap(group_init)(gks),
+        "final_norm": L.norm_init(cfg, cfg.d_model),
+    }
+    if tail:
+        tks = jax.random.split(keys[0], tail)
+        params["tail"] = jax.vmap(lambda k: _block_init(k, cfg, "rec"))(tks)
+    return params
+
+
+def forward(params, batch, cfg: ModelConfig):
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+
+    def group_fwd(xx, gp):
+        xx = _block_fwd(gp["rec1"], xx, cfg, "rec")
+        xx = _block_fwd(gp["rec2"], xx, cfg, "rec")
+        xx = _block_fwd(gp["attn"], xx, cfg, "attn")
+        return xx, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(group_fwd), x, params["groups"])
+    if "tail" in params:
+        body = jax.checkpoint(lambda xx, lp: (_block_fwd(lp, xx, cfg, "rec"), None))
+        x, _ = jax.lax.scan(body, x, params["tail"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+# ------------------------------------------------------------- serving -----
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """Recurrent state + ring-buffer attention caches.
+
+    ``max_len`` bounds only decode position bookkeeping — the attention cache
+    is the window size, so memory is O(window), not O(max_len): this is what
+    makes ``long_500k`` (524288-token context) runnable.
+    """
+    g, tail = n_groups(cfg)
+    w = _w(cfg)
+    win = min(cfg.window or max_len, max_len)
+
+    def rec_state(n):
+        return {"h": jnp.zeros((n, batch, w), jnp.float32),
+                "conv": jnp.zeros((n, batch, cfg.conv_width - 1, w), dtype)}
+
+    cache = {
+        "rec1": rec_state(g), "rec2": rec_state(g),
+        "k": jnp.zeros((g, batch, win, cfg.n_kv, cfg.hd), dtype),
+        "v": jnp.zeros((g, batch, win, cfg.n_kv, cfg.hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+    if tail:
+        cache["tail"] = rec_state(tail)
+    return cache
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = L.embed(params["embed"], tokens[:, None], cfg)
+    pos = cache["pos"]
+
+    def group_step(x, scanned):
+        gp, st1, st2, ck, cv = scanned
+        h = L.apply_norm(gp["rec1"]["ln1"], x, cfg)
+        o, st1 = rec_step(gp["rec1"]["mix"], h, st1, cfg)
+        x = x + o
+        x = x + L.apply_mlp(gp["rec1"]["mlp"], L.apply_norm(gp["rec1"]["ln2"], x, cfg), cfg)
+        h = L.apply_norm(gp["rec2"]["ln1"], x, cfg)
+        o, st2 = rec_step(gp["rec2"]["mix"], h, st2, cfg)
+        x = x + o
+        x = x + L.apply_mlp(gp["rec2"]["mlp"], L.apply_norm(gp["rec2"]["ln2"], x, cfg), cfg)
+        h = L.apply_norm(gp["attn"]["ln1"], x, cfg)
+        a, nk, nv = L.cached_decode_attention(gp["attn"]["mix"], h, ck, cv, pos, cfg)
+        x = x + a
+        x = x + L.apply_mlp(gp["attn"]["mlp"], L.apply_norm(gp["attn"]["ln2"], x, cfg), cfg)
+        return x, (st1, st2, nk, nv)
+
+    x, (st1, st2, nk, nv) = jax.lax.scan(
+        group_step, x,
+        (params["groups"], cache["rec1"], cache["rec2"], cache["k"], cache["v"]))
+    new_cache = dict(cache, rec1=st1, rec2=st2, k=nk, v=nv, pos=pos + 1)
+    if "tail" in params:
+        def tail_step(x, scanned):
+            lp, st = scanned
+            h = L.apply_norm(lp["ln1"], x, cfg)
+            o, st = rec_step(lp["mix"], h, st, cfg)
+            x = x + o
+            x = x + L.apply_mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+            return x, st
+        x, st = jax.lax.scan(tail_step, x, (params["tail"], cache["tail"]))
+        new_cache["tail"] = st
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, new_cache

@@ -1,0 +1,284 @@
+"""RWKV-6 "Finch" (rwkv6-1.6b): attention-free, data-dependent decay.
+
+Time mixing maintains a per-head matrix state S (hd × hd):
+
+    out_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t   = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+with data-dependent decay ``w_t = exp(-exp(w0 + tanh(x_w A_w) B_w))`` and
+token-shift interpolation with LoRA-modulated mixing coefficients (ddlerp).
+Heads are fixed at 64 channels (H = d_model / 64).
+
+Train/prefill evaluates the recurrence with ``lax.scan`` over time inside a
+``lax.scan`` over layers; decode is the O(1) single-step update — which is
+what makes the ``long_500k`` (524288 context) cell runnable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.base import ModelConfig
+from repro.sharding.act import constrain
+
+_LORA = 32     # lora rank for the ddlerp / decay modulators
+_MIX = 5       # r, w, k, v, g
+
+
+def _hd(cfg):   # rwkv head dim is fixed 64
+    return 64
+
+
+def tm_init(key, cfg: ModelConfig):
+    d = cfg.d_model
+    h = cfg.rwkv_heads
+    ks = jax.random.split(key, 10)
+    s = 1.0 / np.sqrt(d)
+    return {
+        "mu_x": jnp.full((d,), 0.5, jnp.float32),
+        "mu": jnp.full((_MIX, d), 0.5, jnp.float32),
+        "lora_a": jax.random.normal(ks[0], (d, _MIX * _LORA), jnp.float32) * s,
+        "lora_b": jax.random.normal(ks[1], (_MIX, _LORA, d), jnp.float32) * 0.01,
+        "w0": jnp.full((d,), -3.0, jnp.float32),
+        "decay_a": jax.random.normal(ks[2], (d, _LORA), jnp.float32) * s,
+        "decay_b": jax.random.normal(ks[3], (_LORA, d), jnp.float32) * 0.01,
+        "u": jax.random.normal(ks[4], (d,), jnp.float32) * 0.1,
+        "wr": jax.random.normal(ks[5], (d, d), jnp.float32) * s,
+        "wk": jax.random.normal(ks[6], (d, d), jnp.float32) * s,
+        "wv": jax.random.normal(ks[7], (d, d), jnp.float32) * s,
+        "wg": jax.random.normal(ks[8], (d, d), jnp.float32) * s,
+        "wo": jax.random.normal(ks[9], (d, d), jnp.float32) * s,
+        "ln_scale": jnp.ones((d,), jnp.float32),   # group-norm over heads
+    }
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent token-shift mix -> (x_r, x_w, x_k, x_v, x_g)."""
+    base = x + (xx - x) * p["mu_x"].astype(x.dtype)
+    lora = jnp.tanh(base @ p["lora_a"].astype(x.dtype))
+    lora = lora.reshape(*lora.shape[:-1], _MIX, _LORA)
+    delta = jnp.einsum("...mr,mrd->...md", lora.astype(jnp.float32), p["lora_b"])
+    mix = p["mu"][None, None] + delta                       # (B, S, 5, D)
+    return [x + (xx - x) * mix[..., i, :].astype(x.dtype) for i in range(_MIX)]
+
+
+def _tm_projections(p, x, xx, cfg):
+    """Shared by scan and step: project to r,k,v,g,w,u head tensors."""
+    h, hd = cfg.rwkv_heads, _hd(cfg)
+    xr, xw, xk, xv, xg = _ddlerp(p, x, xx)
+    shape = (*x.shape[:-1], h, hd)
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(shape).astype(jnp.float32)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(shape).astype(jnp.float32)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(shape).astype(jnp.float32)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    dec = p["w0"] + jnp.tanh(xw.astype(jnp.float32) @ p["decay_a"]) @ p["decay_b"]
+    w = jnp.exp(-jnp.exp(dec)).reshape(shape)               # (..., H, hd) f32
+    return r, k, v, g, w
+
+
+def _gn(p, o, cfg):
+    """Per-head group norm on the wkv output (..., H, hd)."""
+    mean = jnp.mean(o, axis=-1, keepdims=True)
+    var = jnp.var(o, axis=-1, keepdims=True)
+    o = (o - mean) * jax.lax.rsqrt(var + 1e-5)
+    o = o.reshape(*o.shape[:-2], -1)
+    return o * p["ln_scale"]
+
+
+def _wkv_sequential(r, k, v, w, u):
+    """Reference per-token recurrence. r/k/v/w (B, S, H, hd) f32."""
+    b, s, h, hd = r.shape
+
+    def step(S, xs):
+        rt, kt, vt, wt = xs                                   # (B, H, hd) each
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        out = jnp.einsum("bhk,bhkv->bhv", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, out
+
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    tmaj = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))  # (S, B, H, hd)
+    _, outs = jax.lax.scan(step, S0, tmaj)
+    return jnp.moveaxis(outs, 0, 1)                           # (B, S, H, hd)
+
+
+def _wkv_chunked(r, k, v, w, u, chunk: int):
+    """Chunk-parallel WKV (TPU adaptation, DESIGN.md §3/§7).
+
+    Within a chunk of length c the recurrence expands to a masked
+    quasi-attention:   out_t = r̃_t·S_in + Σ_{s<t}(r̃_t·k̃_s) v_s + (r_t⊙u⊙k_t)·v_t
+    with r̃_t = r_t ⊙ exp(cum_{t-1} - cum_mid), k̃_s = k_s ⊙ exp(cum_mid - cum_s)
+    (cum = within-chunk cumulative log-decay; the mid-chunk shift bounds the
+    exponents by half a chunk of decay). The sequential dependency collapses
+    to a scan over S/c chunks carrying S — O(c²·hd) parallel math inside,
+    MXU-friendly and ~c× fewer scan steps (this is what makes the train_4k
+    cell compile: the 4096-step scan previously timed out SPMD partitioning).
+    """
+    b, s, h, hd = r.shape
+    pad = (-s) % chunk
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)),
+                    constant_values=1.0)
+    n = (s + pad) // chunk
+    cshape = (b, n, chunk, h, hd)
+    rc, kc, vc, wc = (t.reshape(cshape) for t in (r, k, v, w))
+    logw = jnp.log(jnp.maximum(wc, 1e-38))
+    cum = jnp.cumsum(logw, axis=2)                      # inclusive, (B,n,c,H,hd)
+    cum_prev = cum - logw                               # exclusive (cum_{t-1})
+    mid = cum[:, :, chunk // 2][:, :, None]
+    r_t = rc * jnp.exp(cum_prev - mid)
+    k_t = kc * jnp.exp(mid - cum)
+    k_end = kc * jnp.exp(cum[:, :, -1:] - cum)          # for the state update
+    mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+
+    def body(S, xs):
+        rt, kt, vt, rc_, kc_, vc_, ke, cend, cprev = xs
+        # intra-chunk masked quasi-attention
+        scores = jnp.einsum("bthk,bshk->bhts", rt, kt)
+        scores = scores * mask[None, None]
+        intra = jnp.einsum("bhts,bshv->bthv", scores, vc_)
+        # current-token bonus
+        bonus = jnp.einsum("bthk,hk,bthk->bth", rc_, u, kc_)
+        intra = intra + bonus[..., None] * vc_
+        # inter-chunk: carry-in state
+        carry = jnp.einsum("bthk,bhkv->bthv", rc_ * jnp.exp(cprev), S)
+        # state update
+        S = jnp.exp(cend)[..., None] * S + jnp.einsum("bshk,bshv->bhkv", ke, vc_)
+        return S, intra + carry
+
+    S0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in
+               (r_t, k_t, vc, rc, kc, vc, k_end,
+                cum[:, :, -1], cum_prev))
+    _, outs = jax.lax.scan(body, S0, xs)
+    o = jnp.moveaxis(outs, 0, 1).reshape(b, s + pad, h, hd)
+    return o[:, :s]
+
+
+def tm_fwd(p, x, cfg: ModelConfig):
+    """Full-sequence time mixing. x (B, S, D)."""
+    b, s, d = x.shape
+    h, hd = cfg.rwkv_heads, _hd(cfg)
+    xx = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]       # token shift
+    r, k, v, g, w = _tm_projections(p, x, xx, cfg)
+    u = p["u"].reshape(h, hd)
+    if s > cfg.rwkv_chunk:
+        o = _wkv_chunked(r, k, v, w, u, cfg.rwkv_chunk)
+    else:
+        o = _wkv_sequential(r, k, v, w, u)
+    o = _gn(p, o, cfg).astype(x.dtype)
+    return (o * g) @ p["wo"].astype(x.dtype)
+
+
+def tm_step(p, x, state, cfg: ModelConfig):
+    """Single token. x (B, D); state {"S": (B,H,hd,hd) f32, "shift": (B,D)}."""
+    h, hd = cfg.rwkv_heads, _hd(cfg)
+    x1 = x[:, None]
+    xx = state["shift"][:, None].astype(x.dtype)
+    r, k, v, g, w = _tm_projections(p, x1, xx, cfg)
+    r, k, v, w = r[:, 0], k[:, 0], v[:, 0], w[:, 0]
+    u = p["u"].reshape(h, hd)
+    kv = jnp.einsum("bhk,bhv->bhkv", k, v)
+    out = jnp.einsum("bhk,bhkv->bhv", r, state["S"] + u[None, :, :, None] * kv)
+    S = w[..., None] * state["S"] + kv
+    o = _gn(p, out[:, None], cfg).astype(x.dtype)
+    o = (o * g) @ p["wo"].astype(x.dtype)
+    return o[:, 0], {"S": S, "shift": x}
+
+
+def cm_init(key, cfg: ModelConfig):
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "wk": jax.random.normal(k1, (d, f), jnp.float32) / np.sqrt(d),
+        "wv": jax.random.normal(k2, (f, d), jnp.float32) / np.sqrt(f),
+        "wr": jax.random.normal(k3, (d, d), jnp.float32) / np.sqrt(d),
+    }
+
+
+def cm_fwd(p, x, xx, cfg: ModelConfig):
+    xk = x + (xx - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (xx - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    return jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * (k @ p["wv"].astype(x.dtype))
+
+
+def init_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "tm": tm_init(k1, cfg), "cm": cm_init(k2, cfg),
+        "ln1": L.norm_init(cfg, cfg.d_model),
+        "ln2": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(keys[:cfg.n_layers])
+    return {
+        "embed": L.embed_init(keys[-1], cfg),
+        "layers": stacked,
+        "final_norm": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+def _layer_fwd(p, x, cfg: ModelConfig):
+    x = constrain(x)
+    x = x + tm_fwd(p["tm"], L.apply_norm(p["ln1"], x, cfg), cfg)
+    x = constrain(x)
+    h = L.apply_norm(p["ln2"], x, cfg)
+    hh = jnp.pad(h, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return constrain(x + cm_fwd(p["cm"], h, hh, cfg))
+
+
+def forward(params, batch, cfg: ModelConfig):
+    x = L.embed(params["embed"], batch["tokens"], cfg)
+    body = jax.checkpoint(lambda xx, lp: (_layer_fwd(lp, xx, cfg), None))
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+# ------------------------------------------------------------- serving -----
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    """O(1)-per-token state — independent of max_len (long_500k friendly)."""
+    h, hd, d, l = cfg.rwkv_heads, 64, cfg.d_model, cfg.n_layers
+    return {
+        "S": jnp.zeros((l, batch, h, hd, hd), jnp.float32),
+        "tm_shift": jnp.zeros((l, batch, d), dtype),
+        "cm_shift": jnp.zeros((l, batch, d), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = L.embed(params["embed"], tokens[:, None], cfg)[:, 0]   # (B, D)
+
+    def body(x, scanned):
+        lp, S, tms, cms = scanned
+        h = L.apply_norm(lp["ln1"], x[:, None], cfg)[:, 0]
+        o, st = tm_step(lp["tm"], h, {"S": S, "shift": tms.astype(x.dtype)}, cfg)
+        x = x + o
+        h = L.apply_norm(lp["ln2"], x[:, None], cfg)[:, 0]
+        o = cm_fwd(lp["cm"], h[:, None], cms[:, None].astype(x.dtype), cfg)[:, 0]
+        x = x + o
+        return x, (st["S"], st["shift"].astype(tms.dtype), h.astype(cms.dtype))
+
+    x, (S, tms, cms) = jax.lax.scan(
+        body, x, (params["layers"], cache["S"], cache["tm_shift"], cache["cm_shift"]))
+    x = L.apply_norm(params["final_norm"], x[:, None], cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, {"S": S, "tm_shift": tms, "cm_shift": cms,
+                    "pos": cache["pos"] + 1}

@@ -1,0 +1,160 @@
+"""Dense GQA decoder-only transformer (qwen2 / qwen1.5 / qwen2.5 / olmo /
+pixtral-backbone families).
+
+Layer-stacked params consumed by ``lax.scan`` with ``jax.checkpoint`` around
+the body (small HLO, remat-friendly). ``input_mode='embeds'`` (pixtral)
+consumes precomputed frontend embeddings instead of token ids — the modality
+frontend is a stub per the assignment spec.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.base import ModelConfig
+from repro.sharding.act import constrain
+
+
+def init_layer(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": L.attn_init(k1, cfg),
+        "mlp": L.mlp_init(k2, cfg),
+        "ln1": L.norm_init(cfg, cfg.d_model),
+        "ln2": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+def init(key, cfg: ModelConfig):
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(keys[:cfg.n_layers])
+    return {
+        "embed": L.embed_init(keys[-1], cfg),
+        "layers": stacked,
+        "final_norm": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+def _attn(p, h, cfg):
+    if cfg.chunked_attn:
+        return L.chunked_causal_attention(p, h, cfg, block=cfg.attn_block)
+    return L.causal_attention(p, h, cfg)
+
+
+def _layer_fwd(p, x, cfg: ModelConfig):
+    x = constrain(x)
+    h = x + _attn(p["attn"], L.apply_norm(p["ln1"], x, cfg), cfg)
+    h = constrain(h)
+    h = h + L.apply_mlp(p["mlp"], L.apply_norm(p["ln2"], h, cfg), cfg)
+    return constrain(h)
+
+
+def backbone(params, x, cfg: ModelConfig):
+    """x (B, S, D) activations -> (B, S, D) after all layers."""
+    body = jax.checkpoint(lambda xx, lp: (_layer_fwd(lp, xx, cfg), None))
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.apply_norm(params["final_norm"], x, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    """-> logits (B, S, V) f32."""
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(L.cdtype(cfg))
+    else:
+        x = L.embed(params["embed"], batch["tokens"], cfg)
+    x = backbone(params, constrain(x), cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+# ------------------------------------------------------------- serving -----
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv, cfg.hd)
+    if cfg.kv_quant:
+        sshape = shape[:-1]
+        return {"k": jnp.zeros(shape, jnp.int8),
+                "v": jnp.zeros(shape, jnp.int8),
+                "ks": jnp.ones(sshape, jnp.float32),
+                "vs": jnp.ones(sshape, jnp.float32),
+                "pos": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    """One token for every sequence in the batch. tokens (B,) int32."""
+    x = L.embed(params["embed"], tokens[:, None], cfg)     # (B, 1, D)
+    pos = cache["pos"]
+
+    if cfg.kv_quant:
+        def body_q8(x, scanned):
+            lp, ck, cv, ks, vs = scanned
+            h = L.apply_norm(lp["ln1"], constrain(x), cfg)
+            a, ck, cv, ks, vs = L.cached_decode_attention_q8(
+                lp["attn"], h, ck, cv, ks, vs, pos, cfg)
+            x = x + a
+            x = x + L.apply_mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+            return constrain(x), (ck, cv, ks, vs)
+
+        x, (nk, nv, nks, nvs) = jax.lax.scan(
+            body_q8, x, (params["layers"], cache["k"], cache["v"],
+                         cache["ks"], cache["vs"]))
+        x = L.apply_norm(params["final_norm"], x, cfg)
+        logits = L.unembed(params["embed"], x, cfg)[:, 0]
+        return logits, {"k": nk, "v": nv, "ks": nks, "vs": nvs,
+                        "pos": pos + 1}
+
+    def body(x, scanned):
+        lp, ck, cv = scanned
+        h = L.apply_norm(lp["ln1"], constrain(x), cfg)
+        a, nk, nv = L.cached_decode_attention(lp["attn"], h, ck, cv, pos, cfg)
+        x = x + a
+        x = x + L.apply_mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+        return constrain(x), (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]       # (B, V)
+    return logits, {"k": nk, "v": nv, "pos": pos + 1}
+
+
+def prefill(params, batch, cfg: ModelConfig, max_len: int | None = None,
+            dtype=jnp.bfloat16):
+    """Populate a KV cache from a full prompt; returns (cache, last_logits).
+
+    Used by the serving engine; the dry-run prefill cells lower ``forward``.
+    """
+    if cfg.input_mode == "embeds":
+        x = batch["embeds"].astype(L.cdtype(cfg))
+    else:
+        x = L.embed(params["embed"], batch["tokens"], cfg)
+    b, s, _ = x.shape
+    max_len = max_len or s
+    positions = jnp.arange(s)[None, :]
+
+    def body(x, lp):
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        q, k, v = L.qkv_project(lp["attn"], h, cfg, positions)
+        qpos = jnp.arange(s)
+        mask = (qpos[:, None] >= qpos[None, :])[None, None]
+        a = L._sdpa(q, k, v, mask, cfg) @ lp["attn"]["wo"].astype(x.dtype)
+        x = x + a
+        x = x + L.apply_mlp(lp["mlp"], L.apply_norm(lp["ln2"], x, cfg), cfg)
+        return x, (k.astype(dtype), v.astype(dtype))
+
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x[:, -1:], cfg)[:, 0]
+    pad = max_len - s
+    ks = jnp.pad(ks, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    vs = jnp.pad(vs, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32)}
+    return cache, logits

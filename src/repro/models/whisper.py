@@ -1,0 +1,193 @@
+"""Whisper-medium encoder-decoder backbone (conv/mel frontend is a STUB per
+the assignment spec — ``input_specs()`` provides precomputed frame embeddings
+(B, S_enc, D) directly).
+
+Encoder: bidirectional pre-LN transformer with sinusoidal positions.
+Decoder: causal self-attention + cross-attention to the encoder output,
+learned positions. Whisper uses parametric LayerNorm and no RoPE.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import layers as L
+from repro.models.base import ModelConfig
+from repro.sharding.act import constrain
+
+_MAX_DEC = 4096  # learned decoder positions allocated (whisper ships 448)
+
+
+def _mlp_init(key, cfg):
+    # whisper MLP is GELU, not gated: reuse wi/wo, no wg
+    k1, k2 = jax.random.split(key)
+    return {"wi": jax.random.normal(k1, (cfg.d_model, cfg.d_ff), jnp.float32) / np.sqrt(cfg.d_model),
+            "wo": jax.random.normal(k2, (cfg.d_ff, cfg.d_model), jnp.float32) / np.sqrt(cfg.d_ff)}
+
+
+def _mlp(p, x):
+    return jax.nn.gelu(x @ p["wi"].astype(x.dtype)) @ p["wo"].astype(x.dtype)
+
+
+def _enc_layer_init(key, cfg):
+    k1, k2 = jax.random.split(key)
+    return {"attn": L.attn_init(k1, cfg), "mlp": _mlp_init(k2, cfg),
+            "ln1": L.norm_init(cfg, cfg.d_model),
+            "ln2": L.norm_init(cfg, cfg.d_model)}
+
+
+def _dec_layer_init(key, cfg):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"self_attn": L.attn_init(k1, cfg), "cross_attn": L.attn_init(k2, cfg),
+            "mlp": _mlp_init(k3, cfg),
+            "ln1": L.norm_init(cfg, cfg.d_model),
+            "ln2": L.norm_init(cfg, cfg.d_model),
+            "ln3": L.norm_init(cfg, cfg.d_model)}
+
+
+def init(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    enc = jax.vmap(lambda k: _enc_layer_init(k, cfg))(
+        jax.random.split(ks[0], cfg.enc_layers))
+    dec = jax.vmap(lambda k: _dec_layer_init(k, cfg))(
+        jax.random.split(ks[1], cfg.n_layers))
+    return {
+        "embed": L.embed_init(ks[2], cfg),
+        "dec_pos": jax.random.normal(ks[3], (_MAX_DEC, cfg.d_model),
+                                     jnp.float32) * 0.01,
+        "enc_layers": enc,
+        "dec_layers": dec,
+        "enc_norm": L.norm_init(cfg, cfg.d_model),
+        "dec_norm": L.norm_init(cfg, cfg.d_model),
+    }
+
+
+def _sinusoid(s, d, dtype):
+    pos = np.arange(s)[:, None]
+    i = np.arange(d // 2)[None, :]
+    ang = pos / (10000 ** (2 * i / d))
+    emb = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(emb, dtype)
+
+
+def encode(params, frames, cfg: ModelConfig):
+    """frames (B, S_enc, D) stub embeddings -> encoder output (B, S_enc, D)."""
+    x = frames.astype(L.cdtype(cfg))
+    x = x + _sinusoid(x.shape[1], cfg.d_model, x.dtype)[None]
+
+    def body(xx, lp):
+        xx = constrain(xx)
+        h = L.apply_norm(lp["ln1"], xx, cfg)
+        xx = xx + L.causal_attention(lp["attn"], h, cfg, causal=False)
+        xx = xx + _mlp(lp["mlp"], L.apply_norm(lp["ln2"], xx, cfg))
+        return constrain(xx), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["enc_layers"])
+    return L.apply_norm(params["enc_norm"], x, cfg)
+
+
+def _cross_attention(p, x, enc_kv, cfg):
+    """x (B, Sd, D) queries against precomputed encoder K/V."""
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv, cfg.hd
+    q = (x @ p["wq"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(x.dtype)
+    q = q.reshape(b, s, h, hd)
+    k, v = enc_kv
+    mask = jnp.ones((1, 1, s, k.shape[1]), bool)
+    out = L._sdpa(q, k, v, mask, cfg)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def _enc_kv(p, enc_out, cfg):
+    b, se, _ = enc_out.shape
+    kv, hd = cfg.n_kv, cfg.hd
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(b, se, kv, hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(b, se, kv, hd)
+    return k, v
+
+
+def decode(params, tokens, enc_out, cfg: ModelConfig):
+    """Teacher-forced decoder -> logits (B, S_dec, V)."""
+    x = L.embed(params["embed"], tokens, cfg)
+    s = tokens.shape[1]
+    x = x + params["dec_pos"][:s][None].astype(x.dtype)
+
+    def body(xx, lp):
+        xx = constrain(xx)
+        h = L.apply_norm(lp["ln1"], xx, cfg)
+        no_rope = cfg.replace(rope_theta=0.0)
+        xx = xx + L.causal_attention(lp["self_attn"], h, no_rope)
+        h = L.apply_norm(lp["ln2"], xx, cfg)
+        xx = xx + _cross_attention(lp["cross_attn"], h,
+                                   _enc_kv(lp["cross_attn"], enc_out, cfg), cfg)
+        xx = xx + _mlp(lp["mlp"], L.apply_norm(lp["ln3"], xx, cfg))
+        return constrain(xx), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["dec_layers"])
+    x = L.apply_norm(params["dec_norm"], x, cfg)
+    return L.unembed(params["embed"], x, cfg)
+
+
+def forward(params, batch, cfg: ModelConfig):
+    enc_out = encode(params, batch["frames"], cfg)
+    return decode(params, batch["tokens"], enc_out, cfg)
+
+
+def loss_fn(params, batch, cfg: ModelConfig):
+    logits = forward(params, batch, cfg)
+    return L.cross_entropy(logits[:, :-1], batch["labels"][:, 1:])
+
+
+# ------------------------------------------------------------- serving -----
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               enc_len: int = 0):
+    l, kv, hd = cfg.n_layers, cfg.n_kv, cfg.hd
+    enc_len = enc_len or max_len
+    return {
+        "k": jnp.zeros((l, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((l, batch, max_len, kv, hd), dtype),
+        # cross K/V precomputed once from the encoder output at prefill
+        "xk": jnp.zeros((l, batch, enc_len, kv, hd), dtype),
+        "xv": jnp.zeros((l, batch, enc_len, kv, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def prefill_cross(params, enc_out, cache, cfg: ModelConfig):
+    """Populate cross-attention K/V from the encoder output."""
+    def body(_, lp):
+        k, v = _enc_kv(lp["cross_attn"], enc_out, cfg)
+        return None, (k, v)
+    _, (xk, xv) = jax.lax.scan(body, None, params["dec_layers"])
+    return dict(cache, xk=xk.astype(cache["xk"].dtype),
+                xv=xv.astype(cache["xv"].dtype))
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = L.embed(params["embed"], tokens[:, None], cfg)
+    pos = cache["pos"]
+    x = x + params["dec_pos"][pos % _MAX_DEC][None, None].astype(x.dtype)
+    no_rope = cfg.replace(rope_theta=0.0)
+
+    def body(x, scanned):
+        lp, ck, cv, xk, xv = scanned
+        h = L.apply_norm(lp["ln1"], x, cfg)
+        a, nk, nv = L.cached_decode_attention(lp["self_attn"], h, ck, cv, pos,
+                                              no_rope)
+        x = x + a
+        h = L.apply_norm(lp["ln2"], x, cfg)
+        x = x + _cross_attention(lp["cross_attn"], h,
+                                 (xk.astype(x.dtype), xv.astype(x.dtype)), cfg)
+        x = x + _mlp(lp["mlp"], L.apply_norm(lp["ln3"], x, cfg))
+        return x, (nk, nv)
+
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec_layers"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]))
+    x = L.apply_norm(params["dec_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, dict(cache, k=nk, v=nv, pos=pos + 1)

@@ -1,0 +1,60 @@
+"""Semantic-operator planner — the paper's motivating application (§1):
+"estimate the number of interactions with the LLM without actual execution".
+
+A semantic operator (e.g. ``SEM_JOIN docs ON similarity(q) <= tau`` followed
+by an LLM call per match) needs the match cardinality BEFORE execution to
+pick a plan: batch size, slot count, whether to run at all (cost ceilings).
+The planner wraps the Dynamic Prober over the operator's embedding corpus and
+converts cardinality estimates into an execution plan for the serving engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+
+from repro.core import estimator as E
+from repro.core.config import ProberConfig
+
+
+@dataclasses.dataclass
+class OperatorPlan:
+    est_matches: float
+    llm_calls: int            # calls the plan will schedule
+    batch_slots: int          # engine slots to provision
+    n_batches: int
+    action: str               # "execute" | "fallback_exact" | "refuse"
+    reason: str = ""
+
+
+class SemanticPlanner:
+    def __init__(self, corpus_embeddings, cfg: ProberConfig, key,
+                 max_calls: int = 512, slot_budget: int = 8):
+        self.cfg = cfg
+        self.max_calls = max_calls
+        self.slot_budget = slot_budget
+        self.state = E.build(corpus_embeddings, cfg, key)
+        self._key = key
+
+    def update_corpus(self, new_embeddings):
+        """Dynamic data updates (paper §5) keep the planner fresh without a
+        rebuild — the whole point of the non-learned estimator."""
+        self.state = E.update(self.state, new_embeddings, self.cfg)
+
+    def estimate(self, q, tau) -> float:
+        self._key, sub = jax.random.split(self._key)
+        return float(E.estimate(self.state, q, tau, self.cfg, sub))
+
+    def plan(self, q, tau) -> OperatorPlan:
+        est = self.estimate(q, tau)
+        calls = int(math.ceil(est))
+        if calls > self.max_calls:
+            return OperatorPlan(est, 0, 0, 0, "refuse",
+                                f"estimated {calls} LLM calls > budget "
+                                f"{self.max_calls}")
+        if calls == 0:
+            return OperatorPlan(est, 0, 0, 0, "execute", "no matches")
+        slots = min(self.slot_budget, max(1, calls))
+        n_batches = int(math.ceil(calls / slots))
+        return OperatorPlan(est, calls, slots, n_batches, "execute")

@@ -1,0 +1,43 @@
+"""Serve-step factories: prefill (full forward, last-position logits) and
+decode (single token against a KV cache / recurrent state)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_family
+from repro.models.base import ModelConfig
+from repro.train.step import _with_unroll
+
+
+def make_prefill_step(cfg: ModelConfig, unroll_layers: bool = False):
+    """prefill(params, batch) -> last-position logits (B, V).
+
+    For whisper this is the encoder pass + cross-KV precompute + one decoder
+    step worth of logits (the realistic prefill work for enc-dec serving).
+    """
+    fam = get_family(cfg)
+
+    def prefill(params, batch):
+        if cfg.family == "whisper":
+            enc_out = fam.encode(params, batch["frames"], cfg)
+            b = enc_out.shape[0]
+            cache = fam.init_cache(cfg, b, 8, enc_len=enc_out.shape[1])
+            cache = fam.prefill_cross(params, enc_out, cache, cfg)
+            bos = jnp.zeros((b,), jnp.int32)
+            logits, cache = fam.decode_step(params, cache, bos, cfg)
+            return logits
+        logits = fam.forward(params, batch, cfg)
+        return logits[:, -1]
+
+    return _with_unroll(prefill, unroll_layers)
+
+
+def make_decode_step(cfg: ModelConfig, unroll_layers: bool = False):
+    """decode(params, cache, tokens (B,)) -> (logits (B, V), new cache)."""
+    fam = get_family(cfg)
+
+    def decode(params, cache, tokens):
+        return fam.decode_step(params, cache, tokens, cfg)
+
+    return _with_unroll(decode, unroll_layers)

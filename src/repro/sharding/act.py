@@ -1,0 +1,76 @@
+"""Activation sharding constraints (MaxText-style).
+
+GSPMD left alone tends to pick contracting-dim strategies for FSDP-sharded
+weights (activations replicated over batch, giant per-layer all-reduces —
+measured 831 GiB/device on olmo-1b before constraints, DESIGN.md §7).
+Pinning activations to batch-sharded layouts at layer boundaries forces the
+ZeRO-style weight all-gather strategy instead.
+
+Models call ``constrain(x)`` at layer boundaries; launchers enable it with
+``with activation_sharding(("pod", "data")): ...`` around trace time. A
+no-op when unset, so small-scale tests/examples are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_act_sharding", default=None)
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, batch_axes):
+    """batch_axes: mesh axis names the batch dim is sharded over (pass only
+    axes whose product divides the batch — callers resolve divisibility)."""
+    tok = _CTX.set((mesh, tuple(batch_axes)) if batch_axes else None)
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def constrain_expert(x: jax.Array, axis: int = 1) -> jax.Array:
+    """Pin MoE dispatch buffers (B, E, C, D) to batch-over-data AND
+    expert-over-model. Activations are replicated over "model" in TP, so
+    every (data i, model j) device can build its (B_i rows x E_j experts)
+    tile of the buffer LOCALLY — the dispatch scatter needs no collective
+    at all, and the expert einsum consumes E-over-model weights in place.
+    (Leaving B unconstrained let GSPMD replicate it and emit 5+ TB of
+    scatter all-reduces; E-over-data all_to_all was also tried and beaten
+    by this layout — EXPERIMENTS.md §Perf iterations 4a/4b.)"""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, batch_axes = ctx
+    if "model" not in mesh.axis_names or x.shape[axis] % mesh.shape["model"]:
+        return x
+    size = 1
+    for a in batch_axes:
+        size *= mesh.shape[a]
+    spec = [None] * x.ndim
+    if x.shape[0] % max(size, 1) == 0 and size > 1:
+        spec[0] = batch_axes if len(batch_axes) > 1 else batch_axes[0]
+    spec[axis] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, P(*spec)))
+
+
+def constrain(x: jax.Array) -> jax.Array:
+    """Pin dim 0 (batch) to the data axes; other dims unconstrained."""
+    ctx = _CTX.get()
+    if ctx is None or x.ndim == 0:
+        return x
+    mesh, axes = ctx
+    size = 1
+    for a in axes:
+        size *= mesh.shape[a]
+    if x.shape[0] % size != 0:
+        return x
+    first = axes if len(axes) > 1 else axes[0]
+    spec = P(first, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

@@ -1,0 +1,180 @@
+"""Parameter-sharding rules: param path -> PartitionSpec on the production
+mesh (DESIGN.md §4).
+
+Placeholders in the rule table resolve per profile:
+  * "model" — tensor/expert parallel axis.
+  * "fsdp"  — parameter sharding over the within-pod data axis (ZeRO-style);
+              resolves to "data" in the ``fsdp_tp`` profile and to ``None``
+              in plain ``tp``.
+
+Every resolved axis is checked for divisibility against the actual dim size;
+non-divisible axes drop to ``None`` (replicated) rather than erroring — the
+fallback is visible in the dry-run memory analysis and is hillclimb fodder,
+never a crash (e.g. whisper's 51865 vocab or 28-head attention vs model=16).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+# (path regex, spec template) — first match wins; template entries align with
+# trailing dims when the leaf has a leading layer-stack axis.
+RULES: list[tuple[str, tuple]] = [
+    (r"embed/embedding$",                      ("model", "fsdp")),
+    (r"embed/lm_head$",                        ("fsdp", "model")),
+    (r"dec_pos$",                              (None, None)),
+    # attention projections (incl. rglru's attn blocks under mix/)
+    (r"(attn|mix)/w[qkv]$",                    (None, "fsdp", "model")),
+    (r"(attn|mix)/wo$",                        (None, "model", "fsdp")),
+    (r"(attn|mix)/b[qkv]$",                    (None, "model")),
+    (r"(q_norm|k_norm)$",                      (None, None)),
+    # dense mlp
+    (r"mlp/w[ig]$",                            (None, "fsdp", "model")),
+    (r"mlp/wo$",                               (None, "model", "fsdp")),
+    # moe (L,E,D,F): experts over "model" (EP), d_model over fsdp — the
+    # 235B expert weights need 256-way sharding to fit HBM. The companion
+    # activation constraint (B over data × E over model on the dispatch
+    # buffer, models/moe.py) is what makes this fast: without it GSPMD
+    # replicated the buffer batch dim and emitted 5+ TB of scatter
+    # all-reduces (EXPERIMENTS.md §Perf iterations 4a/4b).
+    (r"moe/router$",                           (None, "fsdp", None)),
+    (r"moe/w[ig]$",                            (None, "model", "fsdp", None)),
+    (r"moe/wo$",                               (None, "model", None, "fsdp")),
+    # rglru recurrent mix
+    (r"mix/w_(in|gate)$",                      (None, "fsdp", "model")),
+    (r"mix/w_out$",                            (None, "model", "fsdp")),
+    (r"mix/conv_w$",                           (None, None, "model")),
+    (r"mix/(conv_b|lru_lambda|b_a|b_x)$",      (None, "model")),
+    (r"mix/w_[ax]$",                           (None, "fsdp", "model")),
+    # rwkv time mix
+    (r"tm/w[rkvg]$",                           (None, "fsdp", "model")),
+    (r"tm/wo$",                                (None, "model", "fsdp")),
+    (r"tm/lora_a$",                            (None, "fsdp", None)),
+    (r"tm/lora_b$",                            (None, None, None, "fsdp")),
+    (r"tm/decay_a$",                           (None, "fsdp", None)),
+    (r"tm/decay_b$",                           (None, None, "fsdp")),
+    (r"tm/(mu_x|w0|u|ln_scale)$",              (None, "fsdp")),
+    (r"tm/mu$",                                (None, None, "fsdp")),
+    # rwkv channel mix
+    (r"cm/w[kr]$",                             (None, "fsdp", "model")),
+    (r"cm/wv$",                                (None, "model", "fsdp")),
+    (r"cm/mu_[kr]$",                           (None, "fsdp")),
+]
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name]
+
+
+def _resolve(template: tuple, shape: tuple, mesh: Mesh, profile: str) -> P:
+    """Align the template to the TRAILING dims of ``shape`` — leading dims
+    (layer stacks of any depth) stay unsharded; a too-long template loses its
+    leading entries (handles stacked vs unstacked leaves uniformly)."""
+    tpl = tuple(template)
+    if len(tpl) > len(shape):
+        tpl = tpl[len(tpl) - len(shape):]
+    if len(tpl) < len(shape):
+        tpl = (None,) * (len(shape) - len(tpl)) + tpl
+    out = []
+    for dim, want in zip(shape, tpl):
+        axis = None
+        if want == "model":
+            axis = "model"
+        elif want == "fsdp" and profile == "fsdp_tp":
+            axis = "data"
+        if axis is not None and dim % _axis_size(mesh, axis) != 0:
+            axis = None                      # divisibility fallback
+        out.append(axis)
+    return P(*out)
+
+
+def param_specs(params_shape: Any, mesh: Mesh, profile: str = "fsdp_tp") -> Any:
+    """Pytree of PartitionSpec matching ``params_shape`` (arrays or
+    ShapeDtypeStructs)."""
+    flat = jax.tree_util.tree_flatten_with_path(params_shape)[0]
+
+    def spec_for(path, leaf):
+        pstr = "/".join(str(getattr(k, "key", k)) for k in path)
+        for rx, tpl in RULES:
+            if re.search(rx, pstr):
+                return _resolve(tpl, leaf.shape, mesh, profile)
+        return P(*([None] * len(leaf.shape)))
+
+    treedef = jax.tree_util.tree_structure(params_shape)
+    specs = [spec_for(p, l) for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch_shape: Any, mesh: Mesh) -> Any:
+    """Shard the leading (batch) dim of every input over all data-like axes."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+    def spec_for(leaf):
+        if not leaf.shape:
+            return P()
+        b = leaf.shape[0]
+        axes: tuple = dp
+        # drop axes until divisible (e.g. batch 1 for long_500k)
+        while axes and b % _prod(mesh, axes) != 0:
+            axes = axes[1:]
+        first = axes if len(axes) > 1 else (axes[0] if axes else None)
+        return P(first, *([None] * (len(leaf.shape) - 1)))
+
+    return jax.tree_util.tree_map(spec_for, batch_shape)
+
+
+def cache_specs(cache_shape: Any, mesh: Mesh) -> Any:
+    """KV caches / recurrent state: (L, B, ...) -> batch dim sharded over
+    data axes, head-like dims over model when divisible."""
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+    model = _axis_size(mesh, "model")
+
+    def spec_for(leaf):
+        if leaf.ndim <= 1:
+            return P(*([None] * leaf.ndim))
+        axes: tuple = dp
+        b = leaf.shape[1] if leaf.ndim >= 2 else 0
+        while axes and (b == 0 or b % _prod(mesh, axes) != 0):
+            axes = axes[1:]
+        first = axes if len(axes) > 1 else (axes[0] if axes else None)
+        spec = [None, first] + [None] * (leaf.ndim - 2)
+        if leaf.ndim == 5 and leaf.shape[3] == leaf.shape[4] \
+                and leaf.shape[2] % model == 0:
+            # rwkv matrix state (L,B,H,hd,hd): heads over model
+            spec[2] = "model"
+        elif leaf.ndim == 5:
+            # KV cache (L,B,S,KV,hd): prefer kv-head sharding; fall back to
+            # SEQUENCE sharding (flash-decode style). Replicating a 32k
+            # cache over the model axis costs 16x memory + cache-sized
+            # collectives (measured 320 GiB/device on qwen1.5-32b);
+            # hd-sharding was tried and REFUTED (310 GiB of cache
+            # all-gathers around the dynamic write / attention) —
+            # EXPERIMENTS.md §Perf iterations 1a/1b.
+            if leaf.shape[3] % model == 0:
+                spec[3] = "model"
+            elif leaf.shape[2] % model == 0:
+                spec[2] = "model"
+            elif leaf.shape[4] % model == 0:
+                spec[4] = "model"
+        elif leaf.ndim == 4 and leaf.shape[2] >= 1024 \
+                and leaf.shape[2] % model == 0:
+            # KV-quantization scale cache (L,B,S,KV): follow the seq shard
+            spec[2] = "model"
+        elif leaf.ndim in (3, 4) and leaf.shape[-1] % model == 0:
+            # recurrent channel states (G,B,W) / conv states (G,B,cw-1,W):
+            # channels over model (RG-LRU is elementwise -> no comm)
+            spec[-1] = "model"
+        return P(*spec)
+
+    return jax.tree_util.tree_map(spec_for, cache_shape)
+
+
+def _prod(mesh: Mesh, axes: tuple) -> int:
+    n = 1
+    for a in axes:
+        n *= _axis_size(mesh, a)
+    return n

@@ -1,0 +1,88 @@
+"""Train-step factory: loss -> grads -> AdamW, with optional microbatch
+gradient accumulation and optional cross-pod gradient compression.
+
+The returned function is pjit-ready: callers pass in/out shardings from
+sharding/rules.py. ``unroll_layers=True`` unrolls the layer scan so the
+compiled HLO carries per-layer cost explicitly (required for faithful
+cost_analysis in the dry-run — XLA counts a while body once; see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import get_family
+from repro.models.base import ModelConfig
+from repro.optim import adamw
+
+
+def _with_unroll(fn: Callable, unroll: bool):
+    """Patch lax.scan's unroll behaviour for dry-run lowering."""
+    if not unroll:
+        return fn
+    orig = jax.lax.scan
+
+    def scan_unrolled(f, init, xs=None, length=None, **kw):
+        kw.pop("unroll", None)
+        n = length
+        if n is None and xs is not None:
+            n = jax.tree_util.tree_leaves(xs)[0].shape[0]
+        return orig(f, init, xs, length=length, unroll=n or 1, **kw)
+
+    def wrapped(*a, **k):
+        jax.lax.scan = scan_unrolled
+        try:
+            return fn(*a, **k)
+        finally:
+            jax.lax.scan = orig
+    return wrapped
+
+
+def make_loss_fn(cfg: ModelConfig):
+    fam = get_family(cfg)
+    return lambda params, batch: fam.loss_fn(params, batch, cfg)
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig,
+                    n_microbatches: int = 1, unroll_layers: bool = False,
+                    grad_transform: Callable[[Any], Any] | None = None):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``n_microbatches`` > 1 splits the batch on dim 0 and accumulates grads in
+    f32 (sequential scan — the standard memory/throughput trade).
+    ``grad_transform`` hooks gradient compression (optim/compression.py).
+    """
+    loss_fn = _with_unroll(make_loss_fn(cfg), unroll_layers)
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(n_microbatches, b // n_microbatches, *x.shape[1:])
+            micro = jax.tree_util.tree_map(split, batch)
+
+            def acc_body(carry, mb):
+                loss_acc, grad_acc = carry
+                loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+                grad_acc = jax.tree_util.tree_map(
+                    lambda a, g: a + g.astype(jnp.float32), grad_acc, grads)
+                return (loss_acc + loss, grad_acc), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (loss, grads), _ = jax.lax.scan(acc_body, (0.0, zeros), micro)
+            loss = loss / n_microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / n_microbatches, grads)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        new_params, new_opt, metrics = adamw.update(grads, opt_state, params,
+                                                    opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,240 @@
+"""Collective-byte accounting from compiled (post-SPMD) HLO text.
+
+Optimized HLO prints only RESULT shapes inline (operand types are bare
+names), so per-collective traffic is derived from the result shape and the
+replica-group size ``g`` using ring-algorithm wire bytes per device:
+
+    all-reduce          2·r·(g-1)/g          (reduce-scatter + all-gather)
+    all-gather          r·(g-1)/g
+    reduce-scatter      r·(g-1)               (input = r·g, sends (g-1)/g of it)
+    all-to-all          r·(g-1)/g
+    collective-permute  r
+
+This is the actual ICI traffic model (slightly stronger than the raw
+"operand bytes" proxy). Instructions inside while-loop bodies are multiplied
+by the loop trip count — XLA shows a loop body once, which would otherwise
+undercount a scanned-layer model by ~n_layers× (measured in DESIGN.md §7).
+
+Trip counts are recovered from the loop-condition computation (the constant
+bound of its compare) — the standard shape for lax.scan lowerings. Nested
+loops multiply. Fusions cannot contain collectives, so only while/call/
+conditional edges are walked.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+# result types of while are big space-containing tuples: anchor on the
+# opcode + attribute names only
+_WHILE_RE = re.compile(
+    r"\bwhile\(.*?condition=%?([\w\.\-]+).*?body=%?([\w\.\-]+)", re.S)
+_CALL_RE = re.compile(r"(?:to_apply|called_computations?)=\{?%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"s32\[\]\s+constant\((\d+)\)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _split_computations(text: str) -> Dict[str, list[str]]:
+    """Computation headers are non-indented ``%name (args…) -> type {`` lines
+    (args may contain nested parens — match structurally, not by regex)."""
+    comps: Dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        if not line.startswith(" ") and s.endswith("{") and ") -> " in s:
+            tok = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+            cur = tok.lstrip("%")
+            comps[cur] = []
+        elif cur is not None:
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(line)
+    return comps
+
+
+def _entry_name(text: str) -> str | None:
+    m = re.search(r"^ENTRY\s+%?([\w\.\-]+)", text, re.M)
+    return m.group(1) if m else None
+
+
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _result_bytes(line: str) -> int:
+    """Bytes of the instruction's result (tuples summed)."""
+    lhs = line.split(" = ", 1)
+    if len(lhs) != 2:
+        return 0
+    # result type(s) appear between '=' and the opcode
+    rhs = lhs[1]
+    opi = min((rhs.find(op) for op in COLLECTIVES if rhs.find(op) >= 0),
+              default=len(rhs))
+    head = rhs[:opi]
+    sizes = [_shape_bytes(d, dims) for d, dims in _SHAPE_RE.findall(head)]
+    if not sizes:
+        return 0
+    # async -start results are (operand, result) tuples: take the larger
+    return max(sizes) if "-start" in rhs[opi:opi + 40] else sum(sizes)
+
+
+def _collective_bytes_of_line(line: str) -> tuple[str, int] | None:
+    for op in COLLECTIVES:
+        m = re.search(rf"=\s*[^=]*\s{op}(?:-start)?\(", line)
+        if m:
+            r = _result_bytes(line)
+            g = _group_size(line)
+            if op == "all-reduce":
+                wire = 2.0 * r * (g - 1) / g
+            elif op == "all-gather":
+                wire = r * (g - 1) / g
+            elif op == "reduce-scatter":
+                wire = float(r) * (g - 1)
+            elif op == "all-to-all":
+                wire = r * (g - 1) / g
+            else:  # collective-permute
+                wire = float(r)
+            return op, int(wire)
+        if re.search(rf"=\s*[^=]*\s{op}-done\(", line):
+            return None
+    return None
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    consts = [int(c) for l in cond_lines for c in _CONST_RE.findall(l)]
+    return max(consts) if consts else 1
+
+
+def collective_bytes(text: str) -> dict:
+    """-> {"total": int, "per_op": {op: bytes}, "counts": {op: n}} (per device)."""
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+    if entry is None and comps:
+        entry = next(iter(comps))
+
+    # edges: parent -> [(child, multiplier)]
+    edges: Dict[str, list] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                edges[name].append((body, trips))
+                edges[name].append((cond, trips))
+                continue
+            for cm in _CALL_RE.finditer(line):
+                edges[name].append((cm.group(1), 1))
+
+    # accumulate multipliers via DFS from entry
+    mult: Dict[str, int] = defaultdict(int)
+    stack = [(entry, 1)]
+    seen_pairs = set()
+    while stack:
+        name, m = stack.pop()
+        if name not in comps or (name, m) in seen_pairs:
+            continue
+        seen_pairs.add((name, m))
+        mult[name] += m
+        for child, k in edges.get(name, []):
+            stack.append((child, m * k))
+
+    per_op: Dict[str, int] = defaultdict(int)
+    counts: Dict[str, int] = defaultdict(int)
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for line in lines:
+            got = _collective_bytes_of_line(line)
+            if got:
+                op, b = got
+                per_op[op] += b * m
+                counts[op] += m
+    return {"total": int(sum(per_op.values())),
+            "per_op": {k: int(v) for k, v in per_op.items()},
+            "counts": dict(counts)}
+
+
+def top_collectives(text: str, k: int = 12) -> list[dict]:
+    """The k largest collectives (wire bytes × loop multiplier) with their
+    result shapes — the §Perf iteration's profile."""
+    comps = _split_computations(text)
+    entry = _entry_name(text)
+    edges: Dict[str, list] = defaultdict(list)
+    for name, lines in comps.items():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                trips = _trip_count(comps.get(wm.group(1), []))
+                edges[name].append((wm.group(2), trips))
+                edges[name].append((wm.group(1), trips))
+            else:
+                for cm in _CALL_RE.finditer(line):
+                    edges[name].append((cm.group(1), 1))
+    mult: Dict[str, int] = defaultdict(int)
+    stack = [(entry, 1)]
+    seen = set()
+    while stack:
+        name, m = stack.pop()
+        if name not in comps or (name, m) in seen:
+            continue
+        seen.add((name, m))
+        mult[name] += m
+        for child, kk in edges.get(name, []):
+            stack.append((child, m * kk))
+    out = []
+    for name, lines in comps.items():
+        m = mult.get(name, 0)
+        if m == 0:
+            continue
+        for line in lines:
+            got = _collective_bytes_of_line(line)
+            if got:
+                op, b = got
+                shape = _SHAPE_RE.search(line.split(" = ", 1)[-1])
+                out.append({"op": op, "bytes": b * m, "mult": m,
+                            "shape": shape.group(0) if shape else "?",
+                            "line": line.strip()[:120]})
+    out.sort(key=lambda r: -r["bytes"])
+    return out[:k]
+
+
+def while_trip_counts(text: str) -> list[int]:
+    comps = _split_computations(text)
+    out = []
+    for lines in comps.values():
+        for line in lines:
+            wm = _WHILE_RE.search(line)
+            if wm:
+                out.append(_trip_count(comps.get(wm.group(1), [])))
+    return out

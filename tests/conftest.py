@@ -1,0 +1,6 @@
+import os
+import sys
+
+# tests must see 1 device by default (the dry-run sets 512 in its own
+# process); sharding tests spawn subprocesses with their own XLA_FLAGS.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,167 @@
+"""Checkpointing + fault tolerance: atomic publish, restore-latest-valid,
+bit-exact restart continuation, gradient compression, straggler policy."""
+import json
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt.checkpoint import CheckpointManager
+from repro.data.tokens import TokenPipeline
+from repro.ft.failures import FaultTolerantLoop, HeartbeatMonitor, WorkerFailure
+from repro.ft.straggler import StragglerDetector
+from repro.optim import adamw, compression
+
+
+def _tiny_state(key):
+    return {"params": {"w": jax.random.normal(key, (4, 4)),
+                       "b": jnp.zeros((4,))},
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    st = _tiny_state(jax.random.PRNGKey(0))
+    mgr.save(5, st, extra={"pipeline": {"seed": 1, "step": 5}})
+    got = mgr.restore(st)
+    assert got is not None
+    restored, extra, step = got
+    assert step == 5 and extra["pipeline"]["step"] == 5
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(st["params"]["w"]))
+
+
+def test_retention_and_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    st = _tiny_state(jax.random.PRNGKey(0))
+    for s in (1, 2, 3, 4):
+        mgr.save(s, st)
+    assert mgr.latest_step() == 4
+    kept = sorted(p.name for p in Path(tmp_path).glob("step_*"))
+    assert kept == ["step_00000003", "step_00000004"]
+
+
+def test_torn_save_falls_back(tmp_path):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    st = _tiny_state(jax.random.PRNGKey(0))
+    mgr.save(1, st)
+    mgr.save(2, st)
+    # corrupt the newest: delete its manifest (simulates a torn write)
+    (Path(tmp_path) / "step_00000002" / "manifest.json").unlink()
+    assert mgr.latest_step() == 1
+    got = mgr.restore(st)
+    assert got[2] == 1
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(tmp_path)
+    st = _tiny_state(jax.random.PRNGKey(1))
+    mgr.save_async(7, st)
+    mgr.wait()
+    assert mgr.latest_step() == 7
+
+
+def _make_loop(tmp_path, save_every=5):
+    opt_cfg = adamw.AdamWConfig(lr=1e-2, warmup_steps=1, total_steps=100)
+
+    @jax.jit
+    def train(params, opt, batch):
+        def loss_fn(p):
+            pred = batch["x"] @ p["w"] + p["b"]
+            return jnp.mean((pred - batch["y"]) ** 2)
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        p2, o2, m = adamw.update(grads, opt, params, opt_cfg)
+        m["loss"] = loss
+        return p2, o2, m
+
+    class XYPipeline(TokenPipeline):
+        def _batch_at(self, step):
+            key = jax.random.fold_in(jax.random.PRNGKey(self.seed), step)
+            x = jax.random.normal(key, (8, 4))
+            w_true = jnp.eye(4)
+            return {"x": x, "y": x @ w_true}
+
+    params = {"w": jax.random.normal(jax.random.PRNGKey(0), (4, 4)),
+              "b": jnp.zeros((4,))}
+    state = {"params": params, "opt": adamw.init(params)}
+
+    def step_fn(state, batch):
+        p, o, m = train(state["params"], state["opt"], batch)
+        return {"params": p, "opt": o}, {"loss": m["loss"]}
+
+    pipeline = XYPipeline(vocab=1, batch=8, seq=1, seed=0)
+    mgr = CheckpointManager(tmp_path, keep=3)
+    return FaultTolerantLoop(step_fn, mgr, pipeline, save_every=save_every), state
+
+
+def test_ft_loop_identical_with_and_without_failures(tmp_path):
+    """Injected failures + restore must reproduce the exact no-failure run."""
+    loop_a, state_a = _make_loop(tmp_path / "a")
+    final_a, log_a = loop_a.run(state_a, 20)
+
+    fail_at = {7, 13}
+    fired = set()
+
+    def inject(step):
+        if step in fail_at and step not in fired:
+            fired.add(step)
+            return True
+        return False
+
+    loop_b, state_b = _make_loop(tmp_path / "b")
+    final_b, log_b = loop_b.run(state_b, 20, inject=inject)
+    assert loop_b.restarts == 2
+    np.testing.assert_allclose(np.asarray(final_a["params"]["w"]),
+                               np.asarray(final_b["params"]["w"]),
+                               rtol=1e-6)
+    assert abs(log_a[-1]["loss"] - log_b[-1]["loss"]) < 1e-6
+
+
+def test_heartbeat_monitor():
+    hb = HeartbeatMonitor(4, timeout=10.0)
+    for r in range(4):
+        hb.beat(r, now=100.0)
+    hb.beat(2, now=200.0)
+    assert sorted(hb.dead_ranks(now=205.0)) == [0, 1, 3]
+
+
+def test_straggler_detector():
+    det = StragglerDetector(threshold=1.5)
+    for step in range(6):
+        for rank in range(8):
+            det.record(rank, 1.0 if rank != 3 else 2.5)
+    assert det.stragglers() == [3]
+    assert det.mitigation(3) in ("rebalance", "evict")
+
+
+def test_compression_error_feedback_unbiased():
+    """Over many steps the EF residual keeps compressed SGD unbiased: the
+    cumulative applied update approaches the cumulative true gradient."""
+    key = jax.random.PRNGKey(0)
+    grads = {"w": jax.random.normal(key, (64, 64))}
+    state = compression.init_state(grads)
+    applied = jnp.zeros((64, 64))
+    total = jnp.zeros((64, 64))
+    for i in range(30):
+        g = {"w": jax.random.normal(jax.random.fold_in(key, i), (64, 64))}
+        qs, ss, state = compression.compress_tree(g, state)
+        out = compression.decompress_tree(qs, ss)
+        applied = applied + out["w"]
+        total = total + g["w"]
+    # residual bounds the gap: |sum(applied) - sum(true)| = |residual|
+    gap = jnp.abs(applied - total)
+    np.testing.assert_allclose(np.asarray(gap),
+                               np.asarray(jnp.abs(state.residual["w"])),
+                               rtol=1e-3, atol=1e-3)
+    assert float(jnp.max(gap)) < 0.1      # one int8 quantum
+
+
+def test_elastic_plan():
+    from repro.ft.elastic import plan_remesh
+    plan = plan_remesh(n_alive=250, model_parallel=16)
+    assert plan.model == 16 and plan.data == 15 and plan.n_devices == 240
+    with pytest.raises(AssertionError):
+        plan_remesh(n_alive=8, model_parallel=16)

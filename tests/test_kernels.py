@@ -1,0 +1,79 @@
+"""Per-kernel allclose vs the pure-jnp oracles, swept over shapes/dtypes
+(interpret=True executes the Pallas kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("n,d,f", [(64, 16, 8), (300, 96, 20), (257, 33, 13),
+                                   (1, 8, 4)])
+def test_lsh_hash_matches_ref(n, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(n + d), 4)
+    x = jax.random.normal(ks[0], (n, d))
+    a = jax.random.normal(ks[1], (d, f))
+    b = jax.random.uniform(ks[2], (f,))
+    w = jax.random.uniform(ks[3], (f,), minval=0.5, maxval=2.0)
+    np.testing.assert_array_equal(np.asarray(ops.lsh_hash(x, a, b, w)),
+                                  np.asarray(ref.lsh_hash(x, a, b, w)))
+
+
+@pytest.mark.parametrize("n,q,d", [(128, 16, 32), (251, 7, 64), (64, 1, 128),
+                                   (1, 1, 8)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_l2dist_matches_ref(n, q, d, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n * d))
+    x = jax.random.normal(k1, (n, d), dtype)
+    qq = jax.random.normal(k2, (q, d), dtype)
+    got = np.asarray(ops.l2dist(x, qq))
+    want = np.asarray(ref.l2dist(x.astype(jnp.float32),
+                                 qq.astype(jnp.float32)))
+    tol = 1e-3 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(got, want, rtol=tol, atol=tol * d)
+
+
+@pytest.mark.parametrize("n,m,kc", [(100, 8, 16), (513, 16, 64), (1, 4, 8),
+                                    (1024, 32, 256)])
+def test_adc_matches_ref(n, m, kc):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n + m))
+    codes = jax.random.randint(k1, (n, m), 0, kc)
+    lut = jax.random.uniform(k2, (m, kc))
+    np.testing.assert_allclose(np.asarray(ops.adc(codes, lut)),
+                               np.asarray(ref.adc(codes, lut)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("b,k", [(64, 6), (1000, 14), (3, 1), (2048, 10)])
+def test_hamming_matches_ref(b, k):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(b + k))
+    bc = jax.random.randint(k1, (b, k), -3, 4)
+    qc = jax.random.randint(k2, (k,), -3, 4)
+    np.testing.assert_array_equal(np.asarray(ops.hamming(bc, qc)),
+                                  np.asarray(ref.hamming(bc, qc)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 200), m=st.sampled_from([2, 4, 8]),
+       kc=st.sampled_from([4, 16]), seed=st.integers(0, 99))
+def test_adc_property_sweep(n, m, kc, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    codes = jax.random.randint(k1, (n, m), 0, kc)
+    lut = jax.random.uniform(k2, (m, kc))
+    np.testing.assert_allclose(np.asarray(ops.adc(codes, lut, bn=64)),
+                               np.asarray(ref.adc(codes, lut)), rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(1, 150), d=st.sampled_from([4, 32]),
+       f=st.integers(1, 24), seed=st.integers(0, 99))
+def test_lsh_hash_property_sweep(n, d, f, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = jax.random.normal(ks[0], (n, d))
+    a = jax.random.normal(ks[1], (d, f))
+    b = jax.random.uniform(ks[2], (f,))
+    w = jax.random.uniform(ks[3], (f,), minval=0.5, maxval=2.0)
+    np.testing.assert_array_equal(
+        np.asarray(ops.lsh_hash(x, a, b, w, bn=64, bf=8)),
+        np.asarray(ref.lsh_hash(x, a, b, w)))

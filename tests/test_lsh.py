@@ -1,0 +1,106 @@
+"""LSH index unit tests (paper §2.2/§4.2 + sorted-CSR layout invariants)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import lsh
+from repro.core.config import ProberConfig
+
+CFG = ProberConfig(n_tables=2, n_funcs=6)
+
+
+@pytest.fixture(scope="module")
+def data():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (500, 16))
+    return x, lsh.build_index(x, CFG, key)
+
+
+def test_codes_shape(data):
+    x, idx = data
+    assert idx.codes.shape == (2, 500, 6)
+    assert idx.raw.shape == (500, 12)
+
+
+def test_csr_partition_is_exact(data):
+    """Every point appears exactly once; buckets partition the dataset."""
+    x, idx = data
+    for t in range(2):
+        order = np.asarray(idx.order[t])
+        assert sorted(order.tolist()) == list(range(500))
+        nb = int(idx.n_buckets[t])
+        sizes = np.asarray(idx.bucket_sizes[t])
+        starts = np.asarray(idx.bucket_starts[t])
+        assert sizes[:nb].sum() == 500
+        assert (sizes[nb:] == 0).all()
+        # CSR contiguity
+        assert starts[0] == 0
+        np.testing.assert_array_equal(starts[1:nb],
+                                      np.cumsum(sizes[:nb])[:-1])
+
+
+def test_bucket_members_share_code(data):
+    x, idx = data
+    for t in range(2):
+        nb = int(idx.n_buckets[t])
+        codes = np.asarray(idx.codes[t])
+        order = np.asarray(idx.order[t])
+        starts = np.asarray(idx.bucket_starts[t])
+        sizes = np.asarray(idx.bucket_sizes[t])
+        bcodes = np.asarray(idx.bucket_codes[t])
+        for j in range(0, nb, max(nb // 20, 1)):
+            members = order[starts[j]: starts[j] + sizes[j]]
+            for m in members:
+                np.testing.assert_array_equal(codes[m], bcodes[j])
+
+
+def test_bucket_codes_unique(data):
+    _, idx = data
+    for t in range(2):
+        nb = int(idx.n_buckets[t])
+        bc = np.asarray(idx.bucket_codes[t][:nb])
+        assert len(np.unique(bc, axis=0)) == nb
+
+
+def test_hash_point_matches_index(data):
+    x, idx = data
+    codes = lsh.hash_point(idx.params, x[17], CFG.n_tables)
+    np.testing.assert_array_equal(np.asarray(codes),
+                                  np.asarray(idx.codes[:, 17]))
+
+
+def test_hamming_rings(data):
+    x, idx = data
+    qcode = idx.codes[0, 17]
+    ham = lsh.hamming_to_buckets(idx.bucket_codes[0], idx.n_buckets[0], qcode)
+    ham = np.asarray(ham)
+    nb = int(idx.n_buckets[0])
+    # the point's own bucket is at distance 0
+    assert (ham[:nb] == 0).sum() == 1
+    # padding rows can never join a ring
+    assert (ham[nb:] == CFG.n_funcs + 1).all()
+
+
+def test_collision_probability_decreases_with_distance():
+    """LSH property (Def. 4): closer pairs collide more."""
+    key = jax.random.PRNGKey(1)
+    x0 = jax.random.normal(key, (1, 32))
+    near = x0 + 0.05 * jax.random.normal(jax.random.PRNGKey(2), (200, 32))
+    far = x0 + 3.0 * jax.random.normal(jax.random.PRNGKey(3), (200, 32))
+    data = jnp.concatenate([x0, near, far], axis=0)
+    cfg = ProberConfig(n_tables=1, n_funcs=8)
+    idx = lsh.build_index(data, cfg, key)
+    codes = np.asarray(idx.codes[0])
+    ham_near = (codes[1:201] != codes[0]).sum(-1)
+    ham_far = (codes[201:] != codes[0]).sum(-1)
+    assert ham_near.mean() < ham_far.mean()
+
+
+def test_lexsort_rows_sorted():
+    key = jax.random.PRNGKey(4)
+    rows = jax.random.randint(key, (300, 5), 0, 4)
+    perm = lsh.lexsort_rows(rows)
+    s = np.asarray(rows[perm])
+    for i in range(1, len(s)):
+        assert tuple(s[i - 1]) <= tuple(s[i])

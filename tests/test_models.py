@@ -1,0 +1,162 @@
+"""Per-architecture smoke tests (assignment requirement): reduced config of
+the same family, one forward/train step on CPU, output shapes + no NaNs —
+plus decode-path and family-specific math checks."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import get_family, rwkv6
+from repro.optim import adamw
+from repro.train.step import make_train_step
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    if cfg.input_mode == "embeds":
+        return {"embeds": jax.random.normal(key, (B, S, cfg.d_model)),
+                "labels": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+    if cfg.input_mode == "encdec":
+        return {"frames": jax.random.normal(key, (B, S, cfg.d_model)),
+                "tokens": jax.random.randint(key, (B, cfg.dec_len), 0, cfg.vocab),
+                "labels": jax.random.randint(key, (B, cfg.dec_len), 0, cfg.vocab)}
+    return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab),
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = configs.get_smoke_config(arch)
+    fam = get_family(cfg)
+    key = jax.random.PRNGKey(0)
+    params = fam.init(key, cfg)
+    batch = _batch(cfg, key)
+    logits = jax.jit(lambda p, b: fam.forward(p, b, cfg))(params, batch)
+    want_s = cfg.dec_len if cfg.input_mode == "encdec" else S
+    assert logits.shape == (B, want_s, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    # one full train step moves the loss
+    step = make_train_step(cfg, adamw.AdamWConfig(lr=1e-2, warmup_steps=1,
+                                                  total_steps=10))
+    opt = adamw.init(params)
+    p2, o2, m = jax.jit(step)(params, opt, batch)
+    assert bool(jnp.isfinite(m["loss"]))
+    l2 = fam.loss_fn(p2, batch, cfg)
+    assert float(l2) < float(m["loss"])        # same batch: loss must drop
+
+
+@pytest.mark.parametrize("arch", configs.ARCHS)
+def test_smoke_decode(arch):
+    cfg = configs.get_smoke_config(arch)
+    fam = get_family(cfg)
+    key = jax.random.PRNGKey(0)
+    params = fam.init(key, cfg)
+    cache = fam.init_cache(cfg, B, 32)
+    if cfg.input_mode == "encdec":
+        enc_out = fam.encode(params, jax.random.normal(key, (B, S, cfg.d_model)), cfg)
+        cache = fam.prefill_cross(params, enc_out, cache, cfg)
+    tok = jnp.zeros((B,), jnp.int32)
+    dec = jax.jit(lambda p, c, t: fam.decode_step(p, c, t, cfg))
+    for _ in range(3):
+        logits, cache = dec(params, cache, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert int(cache["pos"]) == 3
+
+
+def test_dense_decode_matches_forward():
+    """Teacher-forced decode == forward logits (cache correctness)."""
+    cfg = configs.get_smoke_config("qwen2-7b")
+    fam = get_family(cfg)
+    key = jax.random.PRNGKey(1)
+    params = fam.init(key, cfg)
+    toks = jax.random.randint(key, (B, 8), 0, cfg.vocab)
+    full = fam.forward(params, {"tokens": toks}, cfg)     # (B, 8, V)
+    cache = fam.init_cache(cfg, B, 8)
+    outs = []
+    for t in range(8):
+        logits, cache = fam.decode_step(params, cache, toks[:, t], cfg)
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_rwkv_chunked_equals_sequential():
+    key = jax.random.PRNGKey(0)
+    Bh, Sh, H, hd = 2, 70, 3, 8
+    ks = jax.random.split(key, 5)
+    r, k, v = (jax.random.normal(ks[i], (Bh, Sh, H, hd)) for i in range(3))
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (Bh, Sh, H, hd))) * 0.5 + 0.45
+    u = jax.random.normal(ks[4], (H, hd)) * 0.1
+    seq = rwkv6._wkv_sequential(r, k, v, w, u)
+    for chunk in (16, 64):
+        ch = rwkv6._wkv_chunked(r, k, v, w, u, chunk)
+        np.testing.assert_allclose(np.asarray(ch), np.asarray(seq),
+                                   rtol=2e-3, atol=2e-3)
+
+
+def test_rwkv_decode_matches_forward():
+    cfg = configs.get_smoke_config("rwkv6-1.6b")
+    fam = get_family(cfg)
+    key = jax.random.PRNGKey(2)
+    params = fam.init(key, cfg)
+    toks = jax.random.randint(key, (B, 6), 0, cfg.vocab)
+    full = fam.forward(params, {"tokens": toks}, cfg)
+    cache = fam.init_cache(cfg, B, 6)
+    outs = []
+    for t in range(6):
+        logits, cache = fam.decode_step(params, cache, toks[:, t], cfg)
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_rglru_decode_matches_forward():
+    cfg = configs.get_smoke_config("recurrentgemma-9b")
+    fam = get_family(cfg)
+    key = jax.random.PRNGKey(3)
+    params = fam.init(key, cfg)
+    toks = jax.random.randint(key, (B, 6), 0, cfg.vocab)
+    full = fam.forward(params, {"tokens": toks}, cfg)
+    cache = fam.init_cache(cfg, B, 32)
+    outs = []
+    for t in range(6):
+        logits, cache = fam.decode_step(params, cache, toks[:, t], cfg)
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_windowed_attention_matches_causal_within_window():
+    from repro.models import layers as L
+    cfg = configs.get_smoke_config("recurrentgemma-9b").replace(window=8)
+    key = jax.random.PRNGKey(4)
+    p = L.attn_init(key, cfg)
+    x = jax.random.normal(key, (2, 24, cfg.d_model), jnp.float32)
+    got = L.windowed_attention(p, x, cfg)
+    # manual windowed reference: full attention with band mask
+    q, k, v = L.qkv_project(p, x, cfg, jnp.arange(24)[None])
+    qpos = jnp.arange(24)
+    rel = qpos[:, None] - qpos[None, :]
+    mask = ((rel >= 0) & (rel < cfg.window))[None, None]
+    want = L._sdpa(q, k, v, mask, cfg) @ p["wo"]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_capacity_drops_gracefully():
+    from repro.models import moe
+    cfg = configs.get_smoke_config("qwen3-moe-30b-a3b").replace(
+        capacity_factor=0.5)
+    key = jax.random.PRNGKey(5)
+    p = moe.moe_init(key, cfg)
+    x = jax.random.normal(key, (2, 16, cfg.d_model), jnp.float32)
+    out = moe.apply_moe(p, x, cfg)
+    assert out.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(out)))

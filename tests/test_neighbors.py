@@ -1,0 +1,55 @@
+"""Neighbor lookup table (Alg. 6/9) vs the online Hamming path — the two
+must produce identical rings; updates must equal a fresh build."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lsh, neighbors
+
+
+def _codes(key, b, k, vals=4):
+    return jax.random.randint(key, (b, k), 0, vals)
+
+
+def test_table_matches_online_rings():
+    key = jax.random.PRNGKey(0)
+    codes = _codes(key, 40, 6)
+    # dedupe rows to mimic unique bucket codes
+    codes = jnp.asarray(np.unique(np.asarray(codes), axis=0))
+    b = codes.shape[0]
+    table = neighbors.build(codes, jnp.int32(b), max_dist=6)
+    for i in (0, 1, b // 2):
+        ham = lsh.hamming_to_buckets(codes, jnp.int32(b), codes[i])
+        for k in range(1, 7):
+            online = np.asarray(ham == k)
+            tab = np.asarray(neighbors.ring(table, jnp.int32(i), jnp.int32(k)))
+            np.testing.assert_array_equal(online, tab, err_msg=f"i={i} k={k}")
+
+
+def test_table_respects_max_dist():
+    key = jax.random.PRNGKey(1)
+    codes = jnp.asarray(np.unique(np.asarray(_codes(key, 30, 8)), axis=0))
+    b = codes.shape[0]
+    table = neighbors.build(codes, jnp.int32(b), max_dist=3)
+    d = np.asarray(table.dists)
+    assert d.max() <= 3
+    assert (np.diag(d) == 0).all()
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 1000), n_new=st.integers(1, 10))
+def test_incremental_update_equals_fresh_build(seed, n_new):
+    """Alg. 9 == Alg. 6 on the concatenated code set (property test)."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    old = np.unique(np.asarray(_codes(k1, 25, 5)), axis=0)
+    new = np.asarray(_codes(k2, n_new, 5))
+    both = np.concatenate([old, new], axis=0)
+    n_old, n_all = len(old), len(both)
+    table_old = neighbors.build(jnp.asarray(old), jnp.int32(n_old), max_dist=4)
+    updated = neighbors.update(table_old, jnp.asarray(both),
+                               jnp.int32(n_old), jnp.int32(n_all))
+    fresh = neighbors.build(jnp.asarray(both), jnp.int32(n_all), max_dist=4)
+    np.testing.assert_array_equal(np.asarray(updated.dists),
+                                  np.asarray(fresh.dists))

@@ -1,0 +1,114 @@
+"""Product quantization + ADC tests (paper §2.2/§4.6, Alg. 4/5/8)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import pq as pqmod, updates
+from repro.core.config import ProberConfig
+
+CFG = ProberConfig(pq_m=4, pq_kc=16, pq_iters=10)
+
+
+@pytest.fixture(scope="module")
+def fitted():
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (600, 32))
+    return x, pqmod.fit(x, CFG, key)
+
+
+def test_shapes(fitted):
+    x, pq = fitted
+    assert pq.centroids.shape == (4, 16, 8)
+    assert pq.codes.shape == (600, 4)
+    assert pq.resid.shape == (600,)
+    assert float(jnp.sum(pq.counts)) == 600 * 4
+
+
+def test_codes_are_nearest_centroids(fitted):
+    x, pq = fitted
+    xs = pqmod.split_subspaces(x, 4)
+    again = pqmod.assign(pq.centroids, xs)
+    np.testing.assert_array_equal(np.asarray(again), np.asarray(pq.codes))
+
+
+def test_adc_table_and_distance_consistent(fitted):
+    """ADC distance == ||q - reconstruction||^2 exactly (Alg. 5)."""
+    x, pq = fitted
+    q = x[7] + 0.1
+    lut = pqmod.adc_table(pq, q)
+    d = pqmod.adc_distance(lut, pq.codes[:50])
+    recon = pq.centroids[jnp.arange(4)[None], pq.codes[:50]]  # (50, 4, 8)
+    manual = jnp.sum((pqmod.split_subspaces(x[:50] * 0 + q[None], 4)
+                      - recon) ** 2, axis=(-1, -2))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(manual), rtol=1e-4)
+
+
+def test_adc_band_property(fitted):
+    """Triangle-inequality band: |sqrt(adc) - sqrt(true)| <= resid, always."""
+    x, pq = fitted
+    q = x[3]
+    lut = pqmod.adc_table(pq, q)
+    adc = np.asarray(pqmod.adc_distance(lut, pq.codes))
+    true = np.asarray(jnp.sum((x - q[None]) ** 2, axis=-1))
+    gap = np.abs(np.sqrt(adc) - np.sqrt(true))
+    assert (gap <= np.asarray(pq.resid) + 1e-3).all()
+
+
+def test_adc_approximates_true_distance_structured():
+    """On low-intrinsic-dim data (where distances have spread — isotropic
+    Gaussians concentrate and defeat any quantizer) ADC correlates
+    strongly with true distance."""
+    from repro.data import vectors
+    key = jax.random.PRNGKey(0)
+    x = vectors.make_corpus(key, 2000, 64)
+    cfg = ProberConfig(pq_m=16, pq_kc=32, pq_iters=10)
+    pq = pqmod.fit(x, cfg, key)
+    q = x[3]
+    lut = pqmod.adc_table(pq, q)
+    adc = np.asarray(pqmod.adc_distance(lut, pq.codes))
+    true = np.asarray(jnp.sum((x - q[None]) ** 2, axis=-1))
+    assert np.corrcoef(adc, true)[0, 1] > 0.9
+
+
+def test_update_pq_running_means(fitted):
+    """Alg. 8: counts accumulate; centroids move toward the new mass."""
+    x, pq = fitted
+    key = jax.random.PRNGKey(9)
+    x_new = jax.random.normal(key, (200, 32)) + 2.0
+    pq2 = updates.update_pq(pq, x_new)
+    assert pq2.codes.shape == (800, 4)
+    assert float(jnp.sum(pq2.counts)) == 800 * 4
+    assert pq2.resid.shape == (800,)
+    # new points' codes are nearest of the OLD centroids (paper's rule)
+    xs = pqmod.split_subspaces(x_new, 4)
+    np.testing.assert_array_equal(
+        np.asarray(pqmod.assign(pq.centroids, xs)),
+        np.asarray(pq2.codes[600:]))
+
+
+def test_update_equivalent_mass():
+    """Counts-weighted incremental mean == batch mean when assignments are
+    held fixed."""
+    key = jax.random.PRNGKey(1)
+    x1 = jax.random.normal(key, (100, 8))
+    cfg = ProberConfig(pq_m=2, pq_kc=4, pq_iters=5)
+    pq1 = pqmod.fit(x1, cfg, key)
+    x2 = jax.random.normal(jax.random.PRNGKey(2), (50, 8)) * 0.1
+    pq2 = updates.update_pq(pq1, x2)
+    # manual: c' = (c*n + sum_new)/(n + n_new) per (m, k)
+    xs = pqmod.split_subspaces(x2, 2)
+    codes = pqmod.assign(pq1.centroids, xs)
+    for m in range(2):
+        for k in range(4):
+            mask = np.asarray(codes[:, m]) == k
+            n_old = float(pq1.counts[m, k])
+            if mask.sum() == 0:
+                np.testing.assert_allclose(np.asarray(pq2.centroids[m, k]),
+                                           np.asarray(pq1.centroids[m, k]),
+                                           rtol=1e-5)
+                continue
+            s = np.asarray(xs[:, m][mask]).sum(0)
+            want = (np.asarray(pq1.centroids[m, k]) * n_old + s) / (n_old + mask.sum())
+            np.testing.assert_allclose(np.asarray(pq2.centroids[m, k]), want,
+                                       rtol=1e-4)

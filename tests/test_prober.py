@@ -1,0 +1,129 @@
+"""End-to-end estimator tests (Alg. 1/2/3) + accuracy envelopes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimator as E, prober, lsh
+from repro.core.config import ProberConfig
+from repro.data import vectors
+
+CFG = ProberConfig(n_tables=2, n_funcs=8, ring_budget=1024,
+                   central_budget=1024, chunk=128)
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return vectors.load("sift", n_queries=4, scale=0.2)   # N=8000, d=128
+
+
+@pytest.fixture(scope="module")
+def state(ds):
+    return E.build(ds.x, CFG, jax.random.PRNGKey(0))
+
+
+def test_estimates_track_truth(ds, state):
+    qerrs = []
+    for qi in range(4):
+        ests = E.estimate_batch(
+            state, jnp.tile(ds.queries[qi][None], (ds.taus.shape[1], 1)),
+            ds.taus[qi], CFG, jax.random.PRNGKey(qi))
+        for t in range(ds.taus.shape[1]):
+            e = max(float(ests[t]), 1.0)
+            c = max(float(ds.cards[qi, t]), 1.0)
+            qerrs.append(max(e / c, c / e))
+    assert np.mean(qerrs) < 2.0          # paper-grade accuracy envelope
+    assert np.max(qerrs) < 30.0
+
+
+def test_estimate_nonnegative_and_bounded(ds, state):
+    n = ds.x.shape[0]
+    est = E.estimate(state, ds.queries[0], jnp.float32(1e6), CFG,
+                     jax.random.PRNGKey(0))
+    assert 0 <= float(est) <= n * 1.05   # whole-space query ~= N
+
+
+def test_zero_radius(ds, state):
+    est = E.estimate(state, ds.queries[0] + 100.0, jnp.float32(1e-6), CFG,
+                     jax.random.PRNGKey(0))
+    assert float(est) == 0.0
+
+
+def test_gather_ring_budget_and_validity(ds, state):
+    idx = state.index
+    view = jax.tree_util.tree_map(lambda a: a[0], prober.table_views(idx))
+    qcode = idx.codes[0, 5]
+    ham = lsh.hamming_to_buckets(view.bucket_codes, view.n_buckets, qcode)
+    ids, valid, total = prober.gather_ring(view, ham == 1, 256)
+    ids, valid, total = map(np.asarray, (ids, valid, total))
+    assert ids.shape == (256,)
+    assert valid.sum() == min(total, 256)
+    # gathered ids must actually belong to ring-1 buckets
+    codes = np.asarray(idx.codes[0])
+    q = np.asarray(qcode)
+    for pid in ids[valid]:
+        assert (codes[pid] != q).sum() == 1
+
+
+def test_ring_gather_full_coverage_small():
+    """With a budget >= N, ring gathering is an exact partition."""
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (200, 8))
+    cfg = ProberConfig(n_tables=1, n_funcs=4, ring_budget=256,
+                       central_budget=256, chunk=64)
+    st = E.build(x, cfg, key)
+    view = jax.tree_util.tree_map(lambda a: a[0],
+                                  prober.table_views(st.index))
+    qcode = st.index.codes[0, 0]
+    ham = lsh.hamming_to_buckets(view.bucket_codes, view.n_buckets, qcode)
+    seen = []
+    for k in range(0, 5):
+        ids, valid, total = prober.gather_ring(view, ham == k, 256)
+        assert int(total) == int(np.asarray(valid).sum())
+        seen.extend(np.asarray(ids)[np.asarray(valid)].tolist())
+    assert sorted(seen) == list(range(200))
+
+
+def test_exact_mode_equals_bruteforce_when_budgets_cover():
+    """eps=0 + full budgets + s_max=1 => the estimator IS brute force."""
+    key = jax.random.PRNGKey(4)
+    x = jax.random.normal(key, (300, 16))
+    cfg = ProberConfig(n_tables=1, n_funcs=4, ring_budget=512,
+                       central_budget=512, chunk=128, eps=0.0, s1=1.0,
+                       max_visit=10_000)
+    st = E.build(x, cfg, key)
+    q = x[0] + 0.01
+    for tau in (0.5, 2.0, 5.0):
+        truth = float(E.true_cardinality(x, q, jnp.float32(tau)))
+        est = float(E.estimate(st, q, jnp.float32(tau), cfg,
+                               jax.random.PRNGKey(1)))
+        assert abs(est - truth) < 1e-3, (tau, est, truth)
+
+
+def test_pq_mode_runs(ds):
+    cfg = CFG.replace(use_pq=True, pq_m=16, pq_kc=32, pq_iters=6)
+    st = E.build(ds.x, cfg, jax.random.PRNGKey(0))
+    est = E.estimate(st, ds.queries[0], ds.taus[0, 5], cfg,
+                     jax.random.PRNGKey(1))
+    c = float(ds.cards[0, 5])
+    assert 0 <= float(est) <= ds.x.shape[0]
+    assert max(float(est), 1) / max(c, 1) < 50 and \
+        max(c, 1) / max(float(est), 1) < 50
+
+
+def test_updates_preserve_accuracy(ds):
+    """Paper §5/Fig. 7: build on 30%, update with 70% ~ static build."""
+    n = ds.x.shape[0]
+    n0 = int(n * 0.3) // 4 * 4
+    st = E.build(ds.x[:n0], CFG, jax.random.PRNGKey(0))
+    st = E.update(st, ds.x[n0:], CFG)
+    assert st.index.n_points == n
+    qerrs = []
+    for qi in range(4):
+        for t in range(0, ds.taus.shape[1], 3):
+            est = E.estimate(st, ds.queries[qi], ds.taus[qi, t], CFG,
+                             jax.random.PRNGKey(t))
+            e = max(float(est), 1.0)
+            c = max(float(ds.cards[qi, t]), 1.0)
+            qerrs.append(max(e / c, c / e))
+    assert np.mean(qerrs) < 3.0

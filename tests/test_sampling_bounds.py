@@ -1,0 +1,73 @@
+"""Property tests for the progressive-sampling Chernoff bounds (paper §4.5 +
+Appendix 8.2): coverage, monotonicity, and the stopping semantics."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sampling
+
+
+@settings(deadline=None)
+@given(p_hat=st.floats(0.0, 1.0), w=st.floats(1.0, 1e6),
+       delta=st.floats(1e-6, 0.1))
+def test_bounds_order(p_hat, w, delta):
+    a = math.log(1.0 / delta)
+    lo = float(sampling.mu_lower(p_hat, w, a))
+    hi = float(sampling.mu_upper(p_hat, w, a))
+    assert 0.0 <= lo <= p_hat + 1e-6
+    assert hi >= p_hat - 1e-6
+    assert lo <= hi
+
+
+@settings(deadline=None)
+@given(p_hat=st.floats(0.0, 1.0), delta=st.floats(1e-6, 0.1))
+def test_bounds_tighten_with_w(p_hat, delta):
+    a = math.log(1.0 / delta)
+    widths = []
+    for w in (10.0, 100.0, 10_000.0):
+        widths.append(float(sampling.mu_upper(p_hat, w, a))
+                      - float(sampling.mu_lower(p_hat, w, a)))
+    assert widths[0] >= widths[1] >= widths[2]
+
+
+@settings(max_examples=25, deadline=None)
+@given(p=st.floats(0.01, 0.5), seed=st.integers(0, 2**31 - 1))
+def test_upper_bound_coverage(p, seed):
+    """Pr(p <= mu_upper) >= 1 - delta, checked empirically (Appendix 8.2)."""
+    rng = np.random.default_rng(seed)
+    delta = 1e-3
+    a = math.log(1.0 / delta)
+    w = 400
+    trials = 200
+    failures = 0
+    for _ in range(trials):
+        p_hat = rng.binomial(w, p) / w
+        if p > float(sampling.mu_upper(p_hat, w, a)):
+            failures += 1
+    # should fail ~delta of the time; allow generous slack for 200 trials
+    assert failures <= max(3, int(0.05 * trials))
+
+
+def test_stopping_conditions_consistency():
+    a = math.log(1000.0)
+    # tiny selectivity at a large sample -> both stop conditions fire
+    assert bool(sampling.stop_probing(0.0, 1e5, a, eps=0.01))
+    assert bool(sampling.stop_sampling(0.0, 1e5, a, eps=0.01))
+    # moderate selectivity -> never a PTF even at huge samples
+    assert not bool(sampling.stop_probing(0.3, 1e7, a, eps=0.01))
+    # small sample: CI too wide to stop
+    assert not bool(sampling.stop_sampling(0.3, 5, a, eps=0.01))
+
+
+def test_ptf_implies_small_contribution():
+    """If PTF fires, the ring's true selectivity is < eps w.h.p. — the
+    justification for skipping farther rings (paper eq. (2))."""
+    a = math.log(1000.0)
+    eps = 0.01
+    for w in (100, 1000, 10000):
+        for wq in range(0, w + 1):
+            p_hat = wq / w
+            if bool(sampling.stop_probing(p_hat, float(w), a, eps)):
+                assert float(sampling.mu_upper(p_hat, float(w), a)) < eps
