@@ -3,10 +3,26 @@
 Absolute numbers are CPU-host values (the paper used a 160-thread Xeon); the
 claim validated is the RELATIVE ordering — PQ < exact for high-d, both
 competitive with sampling.
+
+``--batch-sweep`` (or :func:`run_batch_sweep`) measures the batched path
+instead: queries/sec and per-query p50 latency of ``estimate_batch`` at
+Q ∈ {1, 8, 64, 256}, validating that coalescing amortises the hash matmul
+and candidate scan (DESIGN.md §9). Output rows:
+``{"dataset", "batch", "p50_ms_per_query", "qps", "speedup_vs_base"}``.
 """
 from __future__ import annotations
 
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
 from benchmarks import common
+from repro.core import estimator as E
+
+BATCH_SIZES = (1, 8, 64, 256)
 
 
 def run(datasets=None):
@@ -30,5 +46,61 @@ def run(datasets=None):
     return rows
 
 
+def run_batch_sweep(batch_sizes=BATCH_SIZES, dataset: str = "sift",
+                    pool: int = 256, reps: int = 5):
+    """Throughput/latency of ``estimate_batch`` vs batch size Q.
+
+    A fixed pool of ``pool`` (query, tau) requests is processed at every
+    batch size — Q=1 is the per-request dispatch baseline, larger Q
+    coalesces the same workload into pool/Q jitted steps — using the
+    throughput-tuned :func:`common.serve_cfg`. Measurement rounds are
+    INTERLEAVED across batch sizes so ambient load on a shared/throttled
+    host biases every Q equally. Reported per Q: p50 per-query latency
+    (median per-batch wall time / Q) and queries/sec (Q / p50 batch time).
+    """
+    assert pool >= max(batch_sizes), \
+        f"pool={pool} must cover the largest batch size {max(batch_sizes)}"
+    ds = common.dataset(dataset)
+    cfg = common.serve_cfg(ds.x.shape[1])
+    st = E.build(ds.x, cfg, jax.random.PRNGKey(0))
+    jax.block_until_ready(st.index.order)
+    rng = np.random.default_rng(0)
+    queries = np.asarray(ds.queries)
+    taus_all = np.asarray(ds.taus)
+    qi = rng.integers(0, queries.shape[0], pool)
+    ti = rng.integers(0, taus_all.shape[1], pool)
+    qs = jnp.asarray(queries[qi])
+    taus = jnp.asarray(taus_all[qi, ti])
+    for q in batch_sizes:                                # compile per shape
+        E.estimate_batch(st, qs[:q], taus[:q], cfg,
+                         jax.random.PRNGKey(0)).block_until_ready()
+    times: dict[int, list[float]] = {q: [] for q in batch_sizes}
+    for r in range(reps):
+        for q in batch_sizes:
+            for b in range(max(pool // q, 1)):
+                lo = b * q
+                t0 = time.perf_counter()
+                E.estimate_batch(st, qs[lo:lo + q], taus[lo:lo + q], cfg,
+                                 jax.random.PRNGKey(r * pool + b)
+                                 ).block_until_ready()
+                times[q].append(time.perf_counter() - t0)
+    rows = []
+    base_q, base_qps = batch_sizes[0], None
+    for q in batch_sizes:
+        p50 = float(np.percentile(times[q], 50))
+        qps = q / p50
+        base_qps = qps if base_qps is None else base_qps
+        rows.append({"dataset": dataset, "batch": q,
+                     "p50_ms_per_query": 1e3 * p50 / q, "qps": qps,
+                     "speedup_vs_base": qps / base_qps})
+        print(f"[latency-batch] {dataset:9s} Q={q:4d} "
+              f"{1e3 * p50 / q:8.3f} ms/query p50  {qps:10.1f} q/s  "
+              f"({qps / base_qps:5.2f}x vs Q={base_q})")
+    return rows
+
+
 if __name__ == "__main__":
-    run()
+    if "--batch-sweep" in sys.argv[1:]:
+        run_batch_sweep()
+    else:
+        run()

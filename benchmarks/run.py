@@ -12,8 +12,8 @@ import sys
 
 
 def main() -> None:
-    which = set(sys.argv[1:]) or {"qerror", "latency", "build", "adc",
-                                  "epsilon", "updates", "roofline"}
+    which = set(sys.argv[1:]) or {"qerror", "latency", "batch", "build",
+                                  "adc", "epsilon", "updates", "roofline"}
     csv: list[tuple[str, float, str]] = []
 
     if "qerror" in which:
@@ -27,6 +27,13 @@ def main() -> None:
         for r in bench_latency.run():
             csv.append((f"latency/{r['dataset']}/{r['method']}",
                         1e3 * r["ms_per_query"], "online-estimate"))
+    if "batch" in which:
+        from benchmarks import bench_latency
+        for r in bench_latency.run_batch_sweep():
+            csv.append((f"latency-batch/{r['dataset']}/Q{r['batch']}",
+                        1e3 * r["p50_ms_per_query"],
+                        f"qps={r['qps']:.0f};"
+                        f"speedup={r['speedup_vs_base']:.2f}x"))
     if "build" in which:
         from benchmarks import bench_build
         for r in bench_build.run():

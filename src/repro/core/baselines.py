@@ -31,6 +31,24 @@ def sampling_estimate(x, q, tau, key, n_samples: int):
     return frac * n
 
 
+@jax.jit
+def adc_scan_estimate_batch(pq: "pqmod.PQIndex", qs: jax.Array,
+                            taus: jax.Array) -> jax.Array:
+    """Batched full-ADC-scan baseline: exact count under quantisation.
+
+    One pass over the byte codes serves all Q queries through the batched
+    Pallas kernel (``ops.adc_batch``: the (Q, M, Kc) LUT stack stays in
+    VMEM while each code tile is read once; DESIGN.md §9). This is the
+    non-adaptive counterpart the prober is compared against when the whole
+    corpus fits the scan budget — and the regime where coalescing wins by
+    the full Q-fold code-tile reuse.
+    """
+    from repro.kernels import ops
+    luts = jax.vmap(lambda q: pqmod.adc_table(pq, q))(qs)    # (Q, M, Kc)
+    d2 = ops.adc_batch(pq.codes, luts)                       # (Q, N)
+    return jnp.sum((d2 <= taus[:, None] ** 2).astype(jnp.float32), axis=-1)
+
+
 # ------------------------------------------------------ learned baseline ---
 
 class MLPEstimator(NamedTuple):

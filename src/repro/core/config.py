@@ -39,6 +39,11 @@ class ProberConfig:
     pq_exact_rings: int = 2    # beyond-paper: rings k <= this use exact L2
                                # (near rings carry the selectivity mass —
                                # paper Fig. 1); 0 = ADC everywhere (faithful)
+    pq_exact_central: bool = True  # Alg. 3 brute-forces B_central with exact
+                               # L2 (paper-faithful). False = ADC there too:
+                               # the whole estimate then runs off the byte
+                               # codes, never touching the float corpus — the
+                               # high-throughput serving trade (DESIGN.md §9)
     # --- neighbor lookup (paper §4.7, Alg. 6) ---
     table_max_dist: int = 6    # M: distances above this are not stored
     # --- kernels ---

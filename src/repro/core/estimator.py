@@ -1,12 +1,46 @@
 """DynamicProber — the public API of the paper's contribution.
 
-    state = build(x, cfg, key)                 # offline (Alg. 4/6 + index)
-    est   = estimate(state, q, tau, key)       # online  (Alg. 1/2/3/5)
-    ests  = estimate_batch(state, qs, taus, key)
-    state = update(state, x_new, cfg)          # §5      (Alg. 7/8/9)
+    state = build(x, cfg, key)                      # offline (Alg. 4/6 + index)
+    est   = estimate(state, q, tau, cfg, key)       # online  (Alg. 1/2/3/5)
+    ests  = estimate_batch(state, qs, taus, cfg, key)   # batched online path
+    state = update(state, x_new, cfg)               # §5      (Alg. 7/8/9)
 
 The state is a pytree (jit/pmap/shard_map friendly). ``use_pq`` switches the
 candidate distance function from exact L2 to PQ-ADC ("Dynamic Prober-PQ").
+
+Shapes and semantics of the two online entry points:
+
+* ``estimate(state, q, tau, cfg, key) -> ()`` — one query ``q`` of shape
+  (d,) and one radius ``tau`` (scalar); returns the scalar estimate of
+  ``|{p : ||p - q|| <= tau}|``.
+* ``estimate_batch(state, qs, taus, cfg, key) -> (Q,)`` — ``qs`` of shape
+  (Q, d) and ``taus`` of shape (Q,); ``key`` is split into Q per-query keys,
+  so the result is bit-identical to Q sequential ``estimate`` calls with
+  ``jax.random.split(key, Q)[i]`` (tested in tests/test_batched.py). The
+  batch shares one jitted step: the LSH hash matmul, PQ LUT construction and
+  the candidate scan are amortised across queries while each query keeps its
+  own Chernoff stopping state (DESIGN.md §9).
+
+Error model (paper §4.5): with ``eps`` and ``delta`` from the config, each
+ring's progressive sampler stops once the Chernoff interval around the
+empirical selectivity is within ``eps`` on both sides, each side holding
+with probability ``1 - delta`` (``a = ln(1/delta)``). Smaller ``eps`` /
+``delta`` mean more samples and tighter estimates.
+
+Usage::
+
+    import jax, jax.numpy as jnp
+    from repro.core import estimator as E
+    from repro.core.config import ProberConfig
+
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (8192, 128))          # the corpus
+    cfg = ProberConfig(n_tables=2, n_funcs=10)
+    state = E.build(x, cfg, key)
+
+    est = E.estimate(state, x[0], jnp.float32(9.0), cfg, key)   # one query
+    qs, taus = x[:64], jnp.full((64,), 9.0)                     # a batch
+    ests = E.estimate_batch(state, qs, taus, cfg, key)          # (64,)
 """
 from __future__ import annotations
 
@@ -48,8 +82,14 @@ def estimate(state: ProberState, q: jax.Array, tau: jax.Array,
 @partial(jax.jit, static_argnames=("cfg",))
 def estimate_batch(state: ProberState, qs: jax.Array, taus: jax.Array,
                    cfg: ProberConfig, key: jax.Array) -> jax.Array:
+    """Estimate Q cardinalities in one jitted step (see module docstring)."""
     keys = jax.random.split(key, qs.shape[0])
-    return jax.vmap(lambda q, t, k: estimate(state, q, t, cfg, k))(qs, taus, keys)
+    if cfg.use_pq and state.pq is not None:
+        luts = jax.vmap(lambda q: pqmod.adc_table(state.pq, q))(qs)  # (Q,M,Kc)
+        return prober.estimate_batch(state.index, state.x, qs, taus, cfg, keys,
+                                     pq_codes=state.pq.codes, pq_luts=luts,
+                                     pq_resid=state.pq.resid)
+    return prober.estimate_batch(state.index, state.x, qs, taus, cfg, keys)
 
 
 def update(state: ProberState, x_new: jax.Array, cfg: ProberConfig) -> ProberState:

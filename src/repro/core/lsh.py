@@ -13,8 +13,12 @@ matmul; the C++ hash *table* becomes a dense layout per table:
   * ``bucket_sizes``   (L, N)       number of points in bucket j
   * ``n_buckets``      (L,)         number of valid bucket rows
 
-Rows ``j >= n_buckets[l]`` are padding (size 0, code sentinel). ``B_max = N``
-keeps every shape static under jit.
+Rows ``j >= n_buckets[l]`` are padding (size 0, code sentinel). The bucket
+axis is padded to ``B_max = N`` while tracing (shard_map builds), but a
+concrete build TRIMS it to ``max(n_buckets)`` rounded up to a multiple of
+256 (DESIGN.md §9) — real indexes use a fraction of N buckets, and every
+per-query op on the bucket axis (Hamming compare, ring cumsums,
+searchsorted) scales with the padded size.
 
 Raw (pre-division) projections are retained so dynamic updates can recompute
 ``W`` exactly as paper Alg. 7 (``normalizeW``).
@@ -155,9 +159,21 @@ def build_index(x: jax.Array, cfg: ProberConfig, key: jax.Array,
     codes = codes.reshape(x.shape[0], cfg.n_tables, cfg.n_funcs)
     codes = jnp.swapaxes(codes, 0, 1)                       # (L, N, K)
     order, bcodes, starts, sizes, nb = jax.vmap(_build_table)(codes)
+    cap = _static_bucket_cap(nb, x.shape[0])
     return LSHIndex(params=params, raw=raw, codes=codes, order=order,
-                    bucket_codes=bcodes, bucket_starts=starts,
-                    bucket_sizes=sizes, n_buckets=nb)
+                    bucket_codes=bcodes[:, :cap], bucket_starts=starts[:, :cap],
+                    bucket_sizes=sizes[:, :cap], n_buckets=nb)
+
+
+def _static_bucket_cap(n_buckets: jax.Array, n: int) -> int:
+    """Static bucket-axis length: ``max(n_buckets)`` rounded up to a multiple
+    of 256 (shape reuse across similar builds), or ``n`` while tracing —
+    trimming needs a concrete value and padding to N is always correct."""
+    try:
+        m = int(jax.device_get(jnp.max(n_buckets)))
+    except jax.errors.ConcretizationTypeError:
+        return n
+    return min(n, max(256, -(-m // 256) * 256))
 
 
 def hamming_to_buckets(bucket_codes: jax.Array, n_buckets: jax.Array,

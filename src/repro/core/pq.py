@@ -22,7 +22,8 @@ from repro.core.config import ProberConfig
 
 class PQIndex(NamedTuple):
     centroids: jax.Array   # (M, Kc, ds) float32
-    codes: jax.Array       # (N, M) int32
+    codes: jax.Array       # (N, M) uint8 — Kc <= 256; byte codes keep the
+                           # scan cache-resident (DESIGN.md §9)
     counts: jax.Array      # (M, Kc) float32 — for incremental updates (Alg. 8)
     resid: jax.Array       # (N,) float32 — ||x - q(x)|| quantization residual
                            # (beyond-paper: enables banded ADC qualification)
@@ -56,6 +57,7 @@ def assign(centroids: jax.Array, xs: jax.Array) -> jax.Array:
 def fit(x: jax.Array, cfg: ProberConfig, key: jax.Array) -> PQIndex:
     """Lloyd's k-means per subspace, vectorised across all M subspaces."""
     m, kc = cfg.pq_m, cfg.pq_kc
+    assert kc <= 256, f"Kc={kc} must fit a uint8 code"
     xs = split_subspaces(x, m)                               # (N, M, ds)
     n, _, ds = xs.shape
     init_rows = jax.random.choice(key, n, (kc,), replace=n < kc)
@@ -80,7 +82,8 @@ def fit(x: jax.Array, cfg: ProberConfig, key: jax.Array) -> PQIndex:
     counts = jax.ops.segment_sum(jnp.ones((n * m,), jnp.float32), seg,
                                  num_segments=m * kc).reshape(m, kc)
     resid = reconstruction_residual(centroids, codes, xs)
-    return PQIndex(centroids=centroids, codes=codes, counts=counts, resid=resid)
+    return PQIndex(centroids=centroids, codes=codes.astype(jnp.uint8),
+                   counts=counts, resid=resid)
 
 
 def reconstruction_residual(centroids: jax.Array, codes: jax.Array,

@@ -8,6 +8,11 @@ fixed-size chunks inside ``lax.while_loop``, checking the Chernoff bounds of
 §4.5 at the doubling schedule points ``s_{i+1} = 2 s_i``.
 
 Everything is shape-static, jit-able and vmap-able over queries.
+:func:`estimate` handles one query; :func:`estimate_batch` (DESIGN.md §9)
+is the first-class multi-query path — the LSH hash of all Q queries is one
+matmul, ring construction and progressive sampling are vmapped over queries
+(each query keeps its own Chernoff stopping state inside the shared
+``while_loop``), and the per-query PQ LUTs arrive pre-built as (Q, M, Kc).
 """
 from __future__ import annotations
 
@@ -40,14 +45,14 @@ def table_views(index: lsh.LSHIndex) -> TableView:
                      index.bucket_sizes, index.n_buckets)
 
 
-def gather_ring(view: TableView, ring_mask: jax.Array, budget: int):
-    """Gather up to ``budget`` point ids belonging to masked buckets.
+def gather_ring_from_cum(view: TableView, cum: jax.Array, budget: int):
+    """Gather up to ``budget`` point ids given a ring's size cumsum ``cum``.
 
+    ``cum`` is ``cumsum(where(ring_mask, bucket_sizes, 0))`` — precomputed so
+    the batched path can build every ring's cumsum in ONE op (DESIGN.md §9).
     Returns (ids (budget,), valid (budget,), total ()) where ``total`` is the
     *full* ring population |N_k| (may exceed budget).
     """
-    sizes = jnp.where(ring_mask, view.bucket_sizes, 0)
-    cum = jnp.cumsum(sizes)
     total = cum[-1]
     slots = jnp.arange(budget, dtype=jnp.int32)
     j = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32)
@@ -59,105 +64,177 @@ def gather_ring(view: TableView, ring_mask: jax.Array, budget: int):
     return view.order[pos], valid, total
 
 
-def _count_central(view: TableView, ham: jax.Array, qualfn: QualFn,
+def gather_ring(view: TableView, ring_mask: jax.Array, budget: int):
+    """Gather up to ``budget`` point ids belonging to masked buckets."""
+    sizes = jnp.where(ring_mask, view.bucket_sizes, 0)
+    return gather_ring_from_cum(view, jnp.cumsum(sizes), budget)
+
+
+def ring_cumsums(view: TableView, ham: jax.Array, n_rings: int) -> jax.Array:
+    """Masked size cumsums for rings k = 0..n_rings in ONE batched op.
+
+    Returns (n_rings+1, B); row k is ``cumsum(where(ham == k, sizes, 0))``,
+    bit-identical to what :func:`gather_ring` would compute per ring — but
+    hoisted out of the adaptive probing loop, where a fresh (B,) cumsum per
+    visited ring dominated the profile (DESIGN.md §9).
+    """
+    ks = jnp.arange(n_rings + 1, dtype=jnp.int32)
+    masks = ham[None, :] == ks[:, None]                      # (R, B)
+    return jnp.cumsum(jnp.where(masks, view.bucket_sizes[None, :], 0), axis=-1)
+
+
+def _prp_eval(idx: jax.Array, rks: jax.Array, mask: jax.Array,
+              n_bits) -> jax.Array:
+    """Keyed multiply/xorshift PRP on Z_{2^n}; ``mask = 2^n - 1``.
+
+    Each round composes three bijections on Z_{2^n} (odd-multiplier product,
+    xor with a right shift, keyed add), so the map is an exact permutation
+    of [0, 2^n). ``n_bits``/``mask`` may be traced values — the progressive
+    sampler evaluates the PRP over a per-ring power-of-two domain chosen at
+    run time (DESIGN.md §9). Mixing is pseudo-random rather than uniformly
+    distributed over S_n; accuracy envelopes are validated in
+    tests/test_prober.py and benchmarks/bench_qerror.py.
+    """
+    x = idx.astype(jnp.uint32)
+    mask = mask.astype(jnp.uint32) if hasattr(mask, "astype") else \
+        jnp.uint32(mask)
+    for i in range(3):
+        x = (x * (rks[2 * i] | jnp.uint32(1))) & mask
+        shift = n_bits // 2 + (i % 2) + 1
+        x = x ^ jnp.right_shift(x, jnp.asarray(shift, jnp.uint32))
+        x = (x + rks[2 * i + 1]) & mask
+    return x.astype(jnp.int32)
+
+
+def _count_central(view: TableView, cum0: jax.Array, qualfn: QualFn,
                    cfg: ProberConfig):
     """Alg. 3: exact brute-force count inside B_central.
 
     If the bucket exceeds ``central_budget`` the exact count over the gathered
     prefix is scaled by ``total/seen`` (static-shape cap; DESIGN.md §3).
     """
-    ids, valid, total = gather_ring(view, ham == 0, cfg.central_budget)
+    ids, valid, total = gather_ring_from_cum(view, cum0, cfg.central_budget)
     qualified = jnp.sum(qualfn(ids) * valid)
     seen = jnp.sum(valid)
     scale = jnp.where(seen > 0, total / jnp.maximum(seen, 1), 0.0)
     return qualified * scale, seen
 
 
-def _estimate_ring(view: TableView, ring_mask: jax.Array, qualfn: QualFn,
-                   cfg: ProberConfig, key: jax.Array):
-    """Alg. 2 (f_neighbor): progressive sampling inside one ring N_k.
+def estimate_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
+                       cfg: ProberConfig, key: jax.Array,
+                       central_qualfn: QualFn | None = None,
+                       exact_qualfn: QualFn | None = None):
+    """Alg. 1: central bucket exactly, then rings k = 1..K adaptively.
 
-    Returns (ring_estimate, n_visited, ptf).
+    ``central_qualfn`` lets f_central stay exact (Alg. 3 is brute force —
+    the paper applies ADC only inside f_neighbor) while rings use ADC;
+    ``exact_qualfn`` independently routes near rings (k <= pq_exact_rings)
+    through exact distances, so the pq_exact_central and pq_exact_rings
+    knobs compose without coupling.
+
+    Restructured for batching (DESIGN.md §9) into two phases:
+
+    * **Ring construction** (loop-free): all rings' size cumsums come from
+      ONE batched cumsum over the (trimmed) bucket axis; one shared
+      pseudo-random permutation ``pi`` of the ring budget covers every ring.
+      Nothing per-ring is materialised — so under a query batch this phase
+      is a handful of fused, lockstep-free vector ops.
+    * **Progressive sampling** (ONE flat ``while_loop``): each iteration
+      evaluates one ``chunk``-sized slab of a keyed PRP over the current
+      ring's own power-of-two domain P_k = next_pow2(cap_k), rejection-masks
+      entries ``>= cap_k`` (the surviving subsequence of a permutation is a
+      uniform random permutation of the ring's candidates, and P_k < 2 cap_k
+      bounds the rejection rate below 1/2), resolves the slab's candidate
+      ids through the ring cumsum on the fly, and carries a per-lane cursor
+      ``(k, ci)`` plus the per-ring Chernoff state (Alg. 2) — folding the
+      ring estimate and advancing ``k`` when the ring's stopping rule fires.
+      Under vmap, total iterations = max over queries of the slabs that
+      query actually needs — not (max rings) x (max chunks per ring), which
+      is what the previous nested while_loops cost a batch — and each
+      iteration is exactly the op-overhead-dominated work that batching
+      amortises.
     """
+    ham = lsh.hamming_to_buckets(view.bucket_codes, view.n_buckets, qcode)
+    n_rings = view.bucket_codes.shape[-1]  # max k = number of hash functions
+    n_buckets = view.bucket_sizes.shape[-1]
+    cums = ring_cumsums(view, ham, n_rings)                    # (K+1, B)
+    rks = jax.random.bits(key, (6,), jnp.uint32)   # PRP round keys, Alg. 2
+    est0, visited0 = _count_central(view, cums[0], central_qualfn or qualfn,
+                                    cfg)
+
+    totals = cums[1:, -1]                                      # (K,) |N_k|
+    totals_f = totals.astype(jnp.float32)
+    caps = jnp.minimum(totals, cfg.ring_budget)
+    # per-ring PRP domain: P_k = 2^{nbits_k} = next_pow2(cap_k)
+    nbits = jnp.where(caps <= 1, 0,
+                      32 - jax.lax.clz(jnp.maximum(caps - 1, 1)))
+    prings = jnp.left_shift(1, nbits)                          # (K,)
+    # schedule anchors per ring (Alg. 2 line 8): w_1 = ceil(s1 * |N_k|)
+    w_caps = jnp.minimum(jnp.ceil(cfg.s_max * totals_f),
+                         caps.astype(jnp.float32))
+    first_targets = jnp.maximum(jnp.ceil(cfg.s1 * totals_f), 1.0)
+
     a = cfg.a_const
-    ids, valid, total = gather_ring(view, ring_mask, cfg.ring_budget)
-    cap = jnp.minimum(total, cfg.ring_budget)  # points actually addressable
-
-    # Random permutation of the valid prefix: invalid slots sink to the end.
-    keys = jnp.where(valid, jax.random.uniform(key, (cfg.ring_budget,)), jnp.inf)
-    perm = jnp.argsort(keys)
-    shuffled = ids[perm]
-
     chunk = cfg.chunk
-    n_chunks = max(cfg.ring_budget // chunk, 1)
-    total_f = total.astype(jnp.float32)
-    # first schedule point: w_1 = ceil(s1 * |N_k|) (Alg. 2 line 8)
-    first_target = jnp.ceil(cfg.s1 * total_f)
-    w_cap = jnp.minimum(jnp.ceil(cfg.s_max * total_f), cap.astype(jnp.float32))
+    slot_iota = jnp.arange(chunk, dtype=jnp.int32)
 
-    def cond(state):
-        ci, w, wq, done, ptf, target = state
-        return (ci < n_chunks) & (~done)
+    def cond(s):
+        return ~s["done"]
 
-    def body(state):
-        ci, w, wq, done, ptf, target = state
-        sl = jax.lax.dynamic_slice(shuffled, (ci * chunk,), (chunk,))
-        slot = ci * chunk + jnp.arange(chunk, dtype=jnp.int32)
-        ok = slot < cap
-        wq = wq + jnp.sum(qualfn(sl) * ok)
-        w = w + jnp.sum(ok)
+    def body(s):
+        k, ci, row = s["k"], s["ci"], s["k"] - 1
+        p_ring = prings[row]
+        idx = ci * chunk + slot_iota
+        p_slab = _prp_eval(idx, rks, p_ring - 1, nbits[row])
+        cum = cums[k]                                          # (B,)
+        ok = (idx < p_ring) & (p_slab < caps[row])
+        # resolve slab -> point ids through the ring's CSR cumsum
+        j = jnp.minimum(jnp.searchsorted(cum, p_slab, side="right")
+                        .astype(jnp.int32), n_buckets - 1)
+        prev = jnp.where(j > 0, cum[jnp.maximum(j - 1, 0)], 0)
+        pos = view.bucket_starts[j] + (p_slab - prev)
+        pos = jnp.clip(jnp.where(ok, pos, 0), 0, view.order.shape[0] - 1)
+        sl = view.order[pos]
+        if exact_qualfn is not None and cfg.pq_exact_rings > 0:
+            # near rings carry the selectivity mass (paper Fig. 1): spend
+            # exact distances there, ADC beyond (beyond-paper accuracy fix)
+            ring_fn = lambda ids: jax.lax.cond(
+                k <= cfg.pq_exact_rings, exact_qualfn, qualfn, ids)
+        else:
+            ring_fn = qualfn
+        wq = s["wq"] + jnp.sum(ring_fn(sl) * ok)
+        w = s["w"] + jnp.sum(ok)
         wf = w.astype(jnp.float32)
         p_hat = wq / jnp.maximum(wf, 1.0)
-        at_schedule = (wf >= target) | (wf >= w_cap)
+        w_cap = w_caps[row]
+        at_schedule = (wf >= s["target"]) | (wf >= w_cap)
         if not cfg.schedule_checks:      # static: check bounds every chunk
             at_schedule = jnp.bool_(True)
         cond1 = sampling.stop_sampling(p_hat, wf, a, cfg.eps)
         cond2 = sampling.stop_probing(p_hat, wf, a, cfg.eps)
-        new_done = done | (at_schedule & (cond1 | cond2)) | (wf >= w_cap)
-        new_ptf = ptf | (at_schedule & cond2)
-        target = jnp.where(at_schedule, target * 2.0, target)
-        return ci + 1, w, wq, new_done, new_ptf, target
+        ring_done = (at_schedule & (cond1 | cond2)) | (wf >= w_cap) | \
+            ((ci + 1) * chunk >= p_ring)
+        ptf = s["ptf"] | (at_schedule & cond2)
+        target = jnp.where(at_schedule, s["target"] * 2.0, s["target"])
+        est = jnp.where(ring_done, s["est"] + totals_f[row] * p_hat, s["est"])
+        nvisited = jnp.where(ring_done, s["nvisited"] + w, s["nvisited"])
+        nk = jnp.where(ring_done, k + 1, k)
+        nrow = jnp.minimum(nk - 1, n_rings - 1)
+        return {
+            "k": nk, "ci": jnp.where(ring_done, 0, ci + 1),
+            "w": jnp.where(ring_done, 0, w),
+            "wq": jnp.where(ring_done, 0.0, wq),
+            "target": jnp.where(ring_done, first_targets[nrow], target),
+            "est": est, "nvisited": nvisited, "ptf": ptf,
+            "done": (nk > n_rings) | ptf | (nvisited >= cfg.max_visit),
+        }
 
-    state = (jnp.int32(0), jnp.int32(0), jnp.float32(0.0),
-             total == 0, jnp.bool_(False), jnp.maximum(first_target, 1.0))
-    _, w, wq, _, ptf, _ = jax.lax.while_loop(cond, body, state)
-    p_hat = wq / jnp.maximum(w.astype(jnp.float32), 1.0)
-    est = total_f * p_hat
-    return est, w, ptf
-
-
-def estimate_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
-                       cfg: ProberConfig, key: jax.Array,
-                       central_qualfn: QualFn | None = None):
-    """Alg. 1: central bucket exactly, then rings k = 1..K adaptively.
-
-    ``central_qualfn`` lets f_central stay exact (Alg. 3 is brute force —
-    the paper applies ADC only inside f_neighbor) while rings use ADC.
-    """
-    ham = lsh.hamming_to_buckets(view.bucket_codes, view.n_buckets, qcode)
-    est0, visited0 = _count_central(view, ham, central_qualfn or qualfn, cfg)
-    n_rings = view.bucket_codes.shape[-1]  # max k = number of hash functions
-
-    def cond(state):
-        k, est, nvisited, ptf, key = state
-        return (k <= n_rings) & (~ptf) & (nvisited < cfg.max_visit)
-
-    def body(state):
-        k, est, nvisited, ptf, key = state
-        key, sub = jax.random.split(key)
-        if central_qualfn is not None and cfg.pq_exact_rings > 0:
-            # near rings carry the selectivity mass (paper Fig. 1): spend
-            # exact distances there, ADC beyond (beyond-paper accuracy fix)
-            ring_fn = lambda ids: jax.lax.cond(
-                k <= cfg.pq_exact_rings, central_qualfn, qualfn, ids)
-        else:
-            ring_fn = qualfn
-        ring_est, w, ring_ptf = _estimate_ring(view, ham == k, ring_fn, cfg, sub)
-        return k + 1, est + ring_est, nvisited + w, ptf | ring_ptf, key
-
-    state = (jnp.int32(1), est0, visited0, jnp.bool_(False), key)
-    _, est, nvisited, _, _ = jax.lax.while_loop(cond, body, state)
-    return est, nvisited
+    init = {"k": jnp.int32(1), "ci": jnp.int32(0), "w": jnp.int32(0),
+            "wq": jnp.float32(0.0), "target": first_targets[0],
+            "est": est0, "nvisited": visited0, "ptf": jnp.bool_(False),
+            "done": jnp.bool_(n_rings < 1) | (visited0 >= cfg.max_visit)}
+    final = jax.lax.while_loop(cond, body, init)
+    return final["est"], final["nvisited"]
 
 
 def make_exact_qualfn(x: jax.Array, q: jax.Array, tau_sq: jax.Array,
@@ -210,6 +287,29 @@ def make_adc_qualfn(codes: jax.Array, lut: jax.Array, tau_sq: jax.Array,
     return fn
 
 
+def _make_qualfns(x: jax.Array, q: jax.Array, tau_sq: jax.Array,
+                  cfg: ProberConfig, pq_codes, pq_lut, pq_resid):
+    """Qualification routing shared by :func:`estimate` and
+    :func:`estimate_batch` (keeping the two paths bit-identical).
+
+    Returns (qualfn, central_qualfn, exact_qualfn): the ring distance
+    function, the exact function for B_central (None = use ``qualfn``,
+    the ``pq_exact_central=False`` serving trade), and the exact function
+    for near rings k <= ``pq_exact_rings`` (None = ADC everywhere).
+    """
+    if pq_codes is not None and pq_lut is not None:
+        qualfn = make_adc_qualfn(pq_codes, pq_lut, tau_sq, resid=pq_resid,
+                                 banded=cfg.pq_banded,
+                                 use_kernels=cfg.use_kernels)
+        exact = make_exact_qualfn(x, q, tau_sq, use_kernels=cfg.use_kernels) \
+            if (cfg.pq_exact_central or cfg.pq_exact_rings > 0) else None
+        return (qualfn,
+                exact if cfg.pq_exact_central else None,   # Alg. 3
+                exact if cfg.pq_exact_rings > 0 else None)
+    return (make_exact_qualfn(x, q, tau_sq, use_kernels=cfg.use_kernels),
+            None, None)
+
+
 @partial(jax.jit, static_argnames=("cfg",))
 def estimate(index: lsh.LSHIndex, x: jax.Array, q: jax.Array, tau: jax.Array,
              cfg: ProberConfig, key: jax.Array,
@@ -222,21 +322,56 @@ def estimate(index: lsh.LSHIndex, x: jax.Array, q: jax.Array, tau: jax.Array,
     tau_sq = jnp.asarray(tau, jnp.float32) ** 2
     qcodes = lsh.hash_point(index.params, q, index.n_tables)   # (L, K)
     views = table_views(index)
-    if pq_codes is not None and pq_lut is not None:
-        central_qualfn = make_exact_qualfn(x, q, tau_sq,   # Alg. 3: brute force
-                                           use_kernels=cfg.use_kernels)
-        qualfn = make_adc_qualfn(pq_codes, pq_lut, tau_sq, resid=pq_resid,
-                                 banded=cfg.pq_banded,
-                                 use_kernels=cfg.use_kernels)
-    else:
-        central_qualfn = None
-        qualfn = make_exact_qualfn(x, q, tau_sq, use_kernels=cfg.use_kernels)
+    qualfn, central_qualfn, exact_qualfn = _make_qualfns(
+        x, q, tau_sq, cfg, pq_codes, pq_lut, pq_resid)
     keys = jax.random.split(key, index.n_tables)
 
     def per_table(view, qcode, k):
         est, _ = estimate_one_table(view, qcode, qualfn, cfg, k,
-                                    central_qualfn=central_qualfn)
+                                    central_qualfn=central_qualfn,
+                                    exact_qualfn=exact_qualfn)
         return est
 
     ests = jax.vmap(per_table)(views, qcodes, keys)
     return jnp.mean(ests)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def estimate_batch(index: lsh.LSHIndex, x: jax.Array, qs: jax.Array,
+                   taus: jax.Array, cfg: ProberConfig, keys: jax.Array,
+                   pq_codes: jax.Array | None = None,
+                   pq_luts: jax.Array | None = None,
+                   pq_resid: jax.Array | None = None) -> jax.Array:
+    """Batched Alg. 1–3: estimate Q cardinalities in one jitted step.
+
+    ``qs`` is (Q, d), ``taus`` (Q,), ``keys`` (Q, 2) — one PRNG key per query
+    so results are bit-identical to Q sequential :func:`estimate` calls with
+    the same keys. The hash of all queries is a single (Q, d) @ (d, L·K)
+    matmul; per-query ring masks, gathers and the progressive-sampling
+    ``while_loop`` are vmapped, so each query carries its own Chernoff
+    stopping state while the scan work is shared across the batch
+    (DESIGN.md §9). ``pq_luts`` is the pre-built (Q, M, Kc) LUT stack.
+    """
+    qcodes = lsh.hash_point(index.params, qs, index.n_tables)   # (Q, L, K)
+    views = table_views(index)
+    use_pq = pq_codes is not None and pq_luts is not None
+
+    def per_query(q, tau, qcode, key, lut):
+        tau_sq = jnp.asarray(tau, jnp.float32) ** 2
+        qualfn, central_qualfn, exact_qualfn = _make_qualfns(
+            x, q, tau_sq, cfg, pq_codes if use_pq else None, lut, pq_resid)
+        tkeys = jax.random.split(key, index.n_tables)
+
+        def per_table(view, qc, k):
+            est, _ = estimate_one_table(view, qc, qualfn, cfg, k,
+                                        central_qualfn=central_qualfn,
+                                        exact_qualfn=exact_qualfn)
+            return est
+
+        return jnp.mean(jax.vmap(per_table)(views, qcode, tkeys))
+
+    if not use_pq:
+        return jax.vmap(
+            lambda q, t, qc, k: per_query(q, t, qc, k, None)
+        )(qs, taus, qcodes, keys)
+    return jax.vmap(per_query)(qs, taus, qcodes, keys, pq_luts)

@@ -40,9 +40,11 @@ def update_lsh(index: lsh.LSHIndex, x_new: jax.Array,
     codes = codes.reshape(n, cfg.n_tables, cfg.n_funcs)
     codes = jnp.swapaxes(codes, 0, 1)
     order, bcodes, starts, sizes, nb = jax.vmap(lsh._build_table)(codes)
+    cap = lsh._static_bucket_cap(nb, n)
     return lsh.LSHIndex(params=params, raw=raw_adj, codes=codes, order=order,
-                        bucket_codes=bcodes, bucket_starts=starts,
-                        bucket_sizes=sizes, n_buckets=nb)
+                        bucket_codes=bcodes[:, :cap],
+                        bucket_starts=starts[:, :cap],
+                        bucket_sizes=sizes[:, :cap], n_buckets=nb)
 
 
 def update_pq(pq: pqmod.PQIndex, x_new: jax.Array) -> pqmod.PQIndex:
@@ -63,7 +65,8 @@ def update_pq(pq: pqmod.PQIndex, x_new: jax.Array) -> pqmod.PQIndex:
         tot[..., None] > 0,
         (pq.centroids * pq.counts[..., None] + sums) / jnp.maximum(tot[..., None], 1.0),
         pq.centroids)
-    codes = jnp.concatenate([pq.codes, new_codes], axis=0)
+    codes = jnp.concatenate([pq.codes, new_codes.astype(pq.codes.dtype)],
+                            axis=0)
     new_resid = pqmod.reconstruction_residual(new_centroids, new_codes, xs)
     resid = jnp.concatenate([pq.resid, new_resid], axis=0)
     return pqmod.PQIndex(centroids=new_centroids, codes=codes, counts=tot,

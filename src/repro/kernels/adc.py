@@ -8,6 +8,19 @@ the LUT row, accumulated over M via ``fori_loop``. The whole LUT
 codes stream through in (bn, M) int32 tiles.
 
 Grid: (N/bn,).
+
+The batched variant :func:`adc_batch` (DESIGN.md §9) serves Q concurrent
+queries in a single pass over the codes: all Q per-query LUTs — (Q, M, Kc),
+Q×M×Kc×4B, e.g. 2 MiB for Q=64 or 8 MiB for Q=256 at M=32/Kc=256 (size Q
+to leave VMEM headroom for the code tiles) — stay resident in VMEM while
+each (bn, M) code tile is read ONCE and contracted against every LUT,
+emitting a (Q, bn) distance tile per grid step. The one-hot mask is shared
+across queries, so the per-subspace work becomes a (bn, Kc) @ (Kc, Q) matmul
+that the MXU executes natively; code-tile bandwidth is amortised Q-fold over
+the single-query kernel called in a loop. Consumed by the batched
+full-scan baseline (``core/baselines.adc_scan_estimate_batch``) — the
+non-adaptive counterpart of the prober, benchmarked in
+benchmarks/bench_adc.py.
 """
 from __future__ import annotations
 
@@ -36,11 +49,11 @@ def _kernel(codes_ref, lut_ref, out_ref):
 @functools.partial(jax.jit, static_argnames=("bn", "interpret"))
 def adc(codes: jax.Array, lut: jax.Array, *, bn: int = 512,
         interpret: bool = True) -> jax.Array:
-    """codes (N, M) int32, lut (M, Kc) f32 → squared ADC distances (N,)."""
+    """codes (N, M) int (any width), lut (M, Kc) f32 → squared distances (N,)."""
     n, m = codes.shape
     bn = min(bn, n)
     pad_n = (-n) % bn
-    cp = jnp.pad(codes, ((0, pad_n), (0, 0)))
+    cp = jnp.pad(codes.astype(jnp.int32), ((0, pad_n), (0, 0)))
     grid = (cp.shape[0] // bn,)
     out = pl.pallas_call(
         _kernel,
@@ -54,3 +67,46 @@ def adc(codes: jax.Array, lut: jax.Array, *, bn: int = 512,
         interpret=interpret,
     )(cp, lut)
     return out[:n]
+
+
+def _batch_kernel(codes_ref, luts_ref, out_ref):
+    codes = codes_ref[...]             # (bn, M) int32
+    luts = luts_ref[...]               # (Q, M, Kc) f32
+    bn = codes.shape[0]
+    q, m, kc = luts.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, kc), 1)
+
+    def body(j, acc):
+        onehot = (codes[:, j][:, None] == iota).astype(jnp.float32)  # (bn,Kc)
+        return acc + onehot @ luts[:, j, :].T                        # (bn, Q)
+
+    acc = jax.lax.fori_loop(0, m, body, jnp.zeros((bn, q), jnp.float32))
+    out_ref[...] = acc.T
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def adc_batch(codes: jax.Array, luts: jax.Array, *, bn: int = 512,
+              interpret: bool = True) -> jax.Array:
+    """codes (N, M) int32, luts (Q, M, Kc) f32 → squared distances (Q, N).
+
+    One scan over the codes serves all Q queries; equivalent to (but much
+    cheaper than) stacking ``adc(codes, luts[i])`` for each i.
+    """
+    n, m = codes.shape
+    q = luts.shape[0]
+    bn = min(bn, n)
+    pad_n = (-n) % bn
+    cp = jnp.pad(codes.astype(jnp.int32), ((0, pad_n), (0, 0)))
+    grid = (cp.shape[0] // bn,)
+    out = pl.pallas_call(
+        _batch_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec(luts.shape, lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((q, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, cp.shape[0]), jnp.float32),
+        interpret=interpret,
+    )(cp, luts)
+    return out[:, :n]

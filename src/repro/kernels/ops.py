@@ -32,6 +32,11 @@ def adc(codes, lut, **kw):
     return _adc.adc(codes, lut, **kw)
 
 
+def adc_batch(codes, luts, **kw):
+    kw.setdefault("interpret", KERNEL_INTERPRET)
+    return _adc.adc_batch(codes, luts, **kw)
+
+
 def hamming(bucket_codes, qcode, **kw):
     kw.setdefault("interpret", KERNEL_INTERPRET)
     return _hamming.hamming(bucket_codes, qcode, **kw)

@@ -1,11 +1,17 @@
 """Batched serving engine: static-slot continuous batching over the dense
-family's prefill/decode path.
+family's prefill/decode path, plus request coalescing for the estimator.
 
 Small but production-shaped: a request queue, fixed decode slots, per-slot
 positions, EOS/timeout retirement, and step-level batching (every decode
 step advances all live slots in one jitted call). Used by
 examples/serve_semantic.py with a reduced model; the dry-run proves the same
 decode lowers at the assigned 32k/500k shapes.
+
+:class:`CardinalityCoalescer` is the cardinality-side analogue (DESIGN.md
+§9): concurrent ``(q, tau)`` estimation requests queue up and are flushed
+through ONE jitted ``estimate_batch`` step, so the LSH hash matmul, PQ LUT
+build and candidate scan are amortised across every in-flight request
+instead of being re-dispatched per query.
 """
 from __future__ import annotations
 
@@ -16,8 +22,94 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import estimator as E
+from repro.core.config import ProberConfig
 from repro.models import get_family
 from repro.models.base import ModelConfig
+
+
+@dataclasses.dataclass
+class CardRequest:
+    """One pending cardinality-estimation request."""
+    rid: int
+    q: np.ndarray                 # (d,) query embedding
+    tau: float
+    est: Optional[float] = None   # filled by flush()
+
+
+class CardinalityCoalescer:
+    """Coalesces concurrent cardinality requests into one jitted step.
+
+    ``submit`` enqueues; ``flush`` pads the pending batch up to the next
+    power of two (so at most ``log2(max_batch) + 1`` batch shapes ever
+    compile), runs a single ``estimate_batch`` over all of it, and returns
+    ``{rid: estimate}``. Flush ``i`` derives its PRNG key as
+    ``jax.random.fold_in(key, i)``, making a request's estimate a pure
+    function of (key, flush index, position in batch) — deterministic and
+    replayable for audit.
+    """
+
+    def __init__(self, state: E.ProberState, cfg: ProberConfig,
+                 key: jax.Array, max_batch: int = 256):
+        self.state = state
+        self.cfg = cfg
+        self.key = key
+        # round up to a power of two: padding in flush() must never exceed
+        # the configured cap, or the compile-shape bound above breaks
+        self.max_batch = self._pad_to(max_batch)
+        self.pending: list[CardRequest] = []
+        self._next_rid = 0
+        self._n_flushes = 0
+        self._answered: dict[int, float] = {}   # auto-flush results not yet
+                                                # returned by flush()
+
+    def submit(self, q, tau) -> CardRequest:
+        req = CardRequest(rid=self._next_rid, q=np.asarray(q),
+                          tau=float(tau))
+        self._next_rid += 1
+        self.pending.append(req)
+        if len(self.pending) >= self.max_batch:
+            self._answered.update(self._drain())
+        return req
+
+    @staticmethod
+    def _pad_to(n: int) -> int:
+        p = 1
+        while p < n:
+            p *= 2
+        return p
+
+    def flush(self) -> dict[int, float]:
+        """Jitted estimate_batch steps (max_batch each) until nothing is
+        pending; returns every answered {rid: estimate} not yet returned —
+        including requests already answered by a submit()-triggered
+        auto-flush."""
+        out = self._answered
+        self._answered = {}
+        out.update(self._drain())
+        return out
+
+    def _drain(self) -> dict[int, float]:
+        out: dict[int, float] = {}
+        while self.pending:
+            batch, self.pending = self.pending[:self.max_batch], \
+                self.pending[self.max_batch:]
+            n = len(batch)
+            p = self._pad_to(n)
+            d = batch[0].q.shape[-1]
+            qs = np.zeros((p, d), np.float32)
+            taus = np.zeros((p,), np.float32)
+            for i, r in enumerate(batch):
+                qs[i], taus[i] = r.q, r.tau
+            key = jax.random.fold_in(self.key, self._n_flushes)
+            self._n_flushes += 1
+            ests = np.asarray(E.estimate_batch(
+                self.state, jnp.asarray(qs), jnp.asarray(taus),
+                self.cfg, key))
+            for i, r in enumerate(batch):
+                r.est = float(ests[i])
+                out[r.rid] = r.est
+        return out
 
 
 @dataclasses.dataclass

@@ -6,6 +6,12 @@ by an LLM call per match) needs the match cardinality BEFORE execution to
 pick a plan: batch size, slot count, whether to run at all (cost ceilings).
 The planner wraps the Dynamic Prober over the operator's embedding corpus and
 converts cardinality estimates into an execution plan for the serving engine.
+
+Concurrent operators share one prober: :meth:`SemanticPlanner.plan_batch`
+coalesces every outstanding ``(q, tau)`` into a single jitted
+``estimate_batch`` step via the engine's :class:`CardinalityCoalescer`
+(DESIGN.md §9), so N simultaneous plan requests cost one hash matmul and
+one candidate scan instead of N.
 """
 from __future__ import annotations
 
@@ -16,6 +22,7 @@ import jax
 
 from repro.core import estimator as E
 from repro.core.config import ProberConfig
+from repro.serve.engine import CardinalityCoalescer
 
 
 @dataclasses.dataclass
@@ -30,24 +37,33 @@ class OperatorPlan:
 
 class SemanticPlanner:
     def __init__(self, corpus_embeddings, cfg: ProberConfig, key,
-                 max_calls: int = 512, slot_budget: int = 8):
+                 max_calls: int = 512, slot_budget: int = 8,
+                 max_batch: int = 256):
         self.cfg = cfg
         self.max_calls = max_calls
         self.slot_budget = slot_budget
         self.state = E.build(corpus_embeddings, cfg, key)
         self._key = key
+        self._coalescer = CardinalityCoalescer(self.state, cfg, key,
+                                               max_batch=max_batch)
 
     def update_corpus(self, new_embeddings):
         """Dynamic data updates (paper §5) keep the planner fresh without a
         rebuild — the whole point of the non-learned estimator."""
         self.state = E.update(self.state, new_embeddings, self.cfg)
+        self._coalescer.state = self.state
 
     def estimate(self, q, tau) -> float:
         self._key, sub = jax.random.split(self._key)
         return float(E.estimate(self.state, q, tau, self.cfg, sub))
 
-    def plan(self, q, tau) -> OperatorPlan:
-        est = self.estimate(q, tau)
+    def estimate_batch(self, qs, taus) -> list[float]:
+        """Coalesce concurrent requests into one jitted estimate_batch step."""
+        reqs = [self._coalescer.submit(q, t) for q, t in zip(qs, taus)]
+        self._coalescer.flush()
+        return [r.est for r in reqs]
+
+    def _plan_from_estimate(self, est: float) -> OperatorPlan:
         calls = int(math.ceil(est))
         if calls > self.max_calls:
             return OperatorPlan(est, 0, 0, 0, "refuse",
@@ -58,3 +74,11 @@ class SemanticPlanner:
         slots = min(self.slot_budget, max(1, calls))
         n_batches = int(math.ceil(calls / slots))
         return OperatorPlan(est, calls, slots, n_batches, "execute")
+
+    def plan(self, q, tau) -> OperatorPlan:
+        return self._plan_from_estimate(self.estimate(q, tau))
+
+    def plan_batch(self, qs, taus) -> list[OperatorPlan]:
+        """Plan N concurrent operators off ONE coalesced estimation step."""
+        return [self._plan_from_estimate(e)
+                for e in self.estimate_batch(qs, taus)]

@@ -1,0 +1,130 @@
+"""Batched estimation path (DESIGN.md §9).
+
+The contract under test: ``estimate_batch`` over Q queries is bit-for-bit
+identical to Q sequential ``estimate`` calls with the same per-query PRNG
+keys — for the exact path, the PQ path and the full-ADC serving trade —
+and the batched ADC kernel / serve-layer coalescer agree with their
+per-query counterparts.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimator as E, pq as pqmod, prober
+from repro.core.config import ProberConfig
+from repro.kernels import adc as adc_mod
+
+CFG = ProberConfig(n_tables=2, n_funcs=6, ring_budget=512,
+                   central_budget=512, chunk=128)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return jax.random.normal(jax.random.PRNGKey(0), (2000, 32))
+
+
+@pytest.fixture(scope="module")
+def state(data):
+    return E.build(data, CFG, jax.random.PRNGKey(0))
+
+
+def _qs_taus(x, q=6):
+    return x[:q] + 0.01, jnp.linspace(4.0, 9.0, q)
+
+
+def _assert_batch_matches_sequential(st, cfg, qs, taus):
+    key = jax.random.PRNGKey(7)
+    keys = jax.random.split(key, qs.shape[0])
+    batch = E.estimate_batch(st, qs, taus, cfg, key)
+    seq = jnp.stack([E.estimate(st, qs[i], taus[i], cfg, keys[i])
+                     for i in range(qs.shape[0])])
+    np.testing.assert_array_equal(np.asarray(batch), np.asarray(seq))
+    assert np.asarray(batch).std() > 0   # the workload is non-degenerate
+
+
+def test_estimate_batch_bitwise_exact(data, state):
+    qs, taus = _qs_taus(data)
+    _assert_batch_matches_sequential(state, CFG, qs, taus)
+
+
+def test_estimate_batch_bitwise_pq(data):
+    cfg = CFG.replace(use_pq=True, pq_m=8, pq_kc=16, pq_iters=4)
+    st = E.build(data, cfg, jax.random.PRNGKey(0))
+    qs, taus = _qs_taus(data)
+    _assert_batch_matches_sequential(st, cfg, qs, taus)
+
+
+def test_estimate_batch_bitwise_full_adc(data):
+    """The serving trade (DESIGN.md §9): ADC for the central bucket too."""
+    cfg = CFG.replace(use_pq=True, pq_m=8, pq_kc=16, pq_iters=4,
+                      pq_exact_rings=0, pq_exact_central=False, chunk=256)
+    st = E.build(data, cfg, jax.random.PRNGKey(0))
+    qs, taus = _qs_taus(data)
+    _assert_batch_matches_sequential(st, cfg, qs, taus)
+
+
+def test_adc_batch_kernel_matches_per_query():
+    key = jax.random.PRNGKey(1)
+    n, m, kc, q = 777, 8, 32, 5       # n % bn != 0 exercises the padding
+    kc_, kl = jax.random.split(key)
+    codes = jax.random.randint(kc_, (n, m), 0, kc).astype(jnp.uint8)
+    luts = jax.random.uniform(kl, (q, m, kc), dtype=jnp.float32)
+    got = adc_mod.adc_batch(codes, luts, bn=256, interpret=True)
+    assert got.shape == (q, n)
+    single = jnp.stack([adc_mod.adc(codes, luts[i], bn=256, interpret=True)
+                        for i in range(q)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(single),
+                               rtol=1e-6, atol=1e-5)
+    ref = jnp.stack([pqmod.adc_distance(luts[i], codes) for i in range(q)])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_prp_eval_bijective_on_dynamic_domains():
+    rks = jax.random.bits(jax.random.PRNGKey(3), (6,), jnp.uint32)
+    for nbits in (0, 1, 3, 7, 11):
+        p = 1 << nbits
+        out = np.asarray(prober._prp_eval(
+            jnp.arange(p, dtype=jnp.uint32), rks, jnp.int32(p - 1),
+            jnp.int32(nbits)))
+        assert sorted(out.tolist()) == list(range(p)), nbits
+
+
+def test_coalescer_matches_direct_estimate_batch(data, state):
+    from repro.serve.engine import CardinalityCoalescer
+    qs, taus = _qs_taus(data, 5)
+    key = jax.random.PRNGKey(11)
+    co = CardinalityCoalescer(state, CFG, key, max_batch=8)
+    reqs = [co.submit(np.asarray(qs[i]), float(taus[i])) for i in range(5)]
+    out = co.flush()
+    # flush 0 pads 5 -> 8 and derives its key as fold_in(key, 0)
+    pad_qs = jnp.zeros((8, qs.shape[1]), jnp.float32).at[:5].set(qs)
+    pad_taus = jnp.zeros((8,), jnp.float32).at[:5].set(taus)
+    want = E.estimate_batch(state, pad_qs, pad_taus, CFG,
+                            jax.random.fold_in(key, 0))[:5]
+    assert len(out) == 5
+    for i, r in enumerate(reqs):
+        assert out[r.rid] == r.est == float(want[i])
+    assert not co.pending
+
+
+def test_coalescer_auto_flush_at_max_batch(data, state):
+    from repro.serve.engine import CardinalityCoalescer
+    co = CardinalityCoalescer(state, CFG, jax.random.PRNGKey(0), max_batch=4)
+    reqs = [co.submit(np.asarray(data[i]), 5.0) for i in range(4)]
+    assert all(r.est is not None for r in reqs)   # submit #4 flushed
+    assert not co.pending
+
+
+def test_planner_plan_batch_consistent(data):
+    from repro.serve.semantic import SemanticPlanner
+    planner = SemanticPlanner(data, CFG, jax.random.PRNGKey(0),
+                              max_calls=500, slot_budget=4)
+    qs, taus = _qs_taus(data, 4)
+    plans = planner.plan_batch(np.asarray(qs), np.asarray(taus))
+    assert len(plans) == 4
+    for p in plans:
+        assert p.action in ("execute", "refuse")
+        if p.action == "execute" and p.llm_calls:
+            assert p.n_batches == -(-p.llm_calls // p.batch_slots)

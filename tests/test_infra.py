@@ -1,5 +1,8 @@
 """Infra tests: HLO collective parser, roofline math, token pipeline
-determinism, serving engine, semantic planner."""
+determinism, serving engine, semantic planner, doc consistency."""
+import re
+from pathlib import Path
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -103,6 +106,29 @@ def test_serving_engine_end_to_end():
     done = eng.run()
     assert len(done) == 5
     assert all(1 <= len(r.out) <= 4 for r in done)
+
+
+def test_design_doc_references_resolve():
+    """Every ``DESIGN.md §N`` citation in src/ must name a real section.
+
+    Docstrings across src/repro/ cite DESIGN.md sections (e.g. "DESIGN.md
+    §3", "DESIGN.md §3/§7"); this keeps the document and the code from
+    drifting apart.
+    """
+    root = Path(__file__).resolve().parents[1]
+    design = (root / "DESIGN.md").read_text()
+    headings = set(re.findall(r"^#+\s*§(\d+)", design, flags=re.M))
+    assert headings, "DESIGN.md has no '§N' section headings"
+    refs: dict[str, list[str]] = {}
+    for p in sorted((root / "src").rglob("*.py")):
+        for m in re.finditer(r"DESIGN\.md\s+((?:§\d+[/,]?\s?)+)",
+                             p.read_text()):
+            for sec in re.findall(r"§(\d+)", m.group(1)):
+                refs.setdefault(sec, []).append(str(p.relative_to(root)))
+    assert refs, "no DESIGN.md references found under src/"
+    missing = {s: sorted(set(fs)) for s, fs in refs.items()
+               if s not in headings}
+    assert not missing, f"DESIGN.md sections cited but absent: {missing}"
 
 
 def test_semantic_planner_plans_and_updates():

@@ -3,8 +3,7 @@ Appendix 8.2): coverage, monotonicity, and the stopping semantics."""
 import math
 
 import numpy as np
-import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import sampling
 
