@@ -42,7 +42,8 @@ def run(dims=(128, 304, 960, 1776), n: int = 20000):
         # batched multi-query scan through the Pallas kernel (Q=8, code
         # subset: interpret-mode execution on CPU is Python-speed)
         sub = pqmod.PQIndex(centroids=pq.centroids, codes=pq.codes[:2048],
-                            counts=pq.counts, resid=pq.resid[:2048])
+                            counts=pq.counts, resid=pq.resid[:2048],
+                            n_valid=jnp.int32(2048))
         qs8 = x[:8] + 0.1
         taus8 = jnp.full((8,), jnp.sqrt(jnp.mean(jnp.sum(x[:64] ** 2, -1))))
         t_scan = _time(baselines.adc_scan_estimate_batch, sub, qs8, taus8,

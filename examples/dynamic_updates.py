@@ -1,5 +1,6 @@
 """Paper §5 walkthrough: build on 10% of the data, stream the rest in as
-updates, and compare accuracy/time against a from-scratch rebuild.
+recompile-free capacity-padded updates (DESIGN.md §10), and compare
+accuracy/time against a from-scratch rebuild.
 
   PYTHONPATH=src python examples/dynamic_updates.py
 """
@@ -7,7 +8,7 @@ import time
 
 import jax
 
-from repro.core import estimator as E
+from repro.core import estimator as E, updates
 from repro.core.config import ProberConfig
 from repro.data import vectors
 
@@ -19,12 +20,26 @@ cfg = ProberConfig(n_tables=2, n_funcs=10, ring_budget=2048,
                    central_budget=2048, chunk=128)
 
 t0 = time.time()
-state = E.build(ds.x[:n0], cfg, key)
-print(f"initial build on {n0} pts: {time.time()-t0:.2f}s")
+# capacity-padded build: spare rows make every in-capacity update ONE cached
+# jitted step — no recompilation until the capacity doubles
+state = E.build(ds.x[:n0], cfg, key, capacity=updates.next_pow2(n))
+print(f"initial build on {n0} pts (capacity {state.capacity}): "
+      f"{time.time()-t0:.2f}s")
 
+CHUNK = 1024                                 # fixed shape => one compile
 t0 = time.time()
-state = E.update(state, ds.x[n0:], cfg)      # Alg. 7/8(/9)
-print(f"update with {n-n0} pts:    {time.time()-t0:.2f}s")
+state = E.update(state, ds.x[n0:n0 + CHUNK], cfg)   # Alg. 7/8 (+ compile)
+t_first = time.time() - t0
+t0 = time.time()
+for i in range(n0 + CHUNK, n, CHUNK):
+    state = E.update(state, ds.x[i:i + CHUNK], cfg)
+jax.block_until_ready(state.index.order)
+t_rest = time.time() - t0
+n_rest = n - n0 - CHUNK
+print(f"first chunk (compiles):    {t_first:.2f}s")
+print(f"stream {n_rest} pts:          {t_rest:.2f}s "
+      f"({n_rest / max(t_rest, 1e-9):,.0f} pts/s amortized)")
+assert int(state.n_valid) == n
 
 t0 = time.time()
 static = E.build(ds.x, cfg, key)
@@ -44,4 +59,4 @@ def mean_qerr(st):
 
 print(f"mean Q-error  updated framework: {mean_qerr(state):.2f}")
 print(f"mean Q-error  static build:      {mean_qerr(static):.2f}")
-print("=> updates preserve accuracy (paper Fig. 7)")
+print("=> updates preserve accuracy (paper Fig. 7) without rebuilds")

@@ -28,8 +28,10 @@ for t in range(0, ds.taus.shape[1], 2):
     print(f"{float(tau):8.2f} {true:6.0f} {est:9.1f} {q:8.2f}")
 
 # dynamic update (paper §5): append fresh points, estimates stay calibrated
+# (state.x is capacity-padded after the update — mask truth by n_valid)
 new_points = jax.random.normal(key, (1024, ds.x.shape[1])) * 0.1 + ds.x[:1024]
 state = E.update(state, new_points, cfg)
 est = float(E.estimate(state, ds.queries[0], ds.taus[0, 6], cfg, key))
-true = float(E.true_cardinality(state.x, ds.queries[0], ds.taus[0, 6]))
+true = float(E.true_cardinality(state.x, ds.queries[0], ds.taus[0, 6],
+                                n_valid=state.n_valid))
 print(f"after +1024 points: estimate={est:.1f} true={true:.0f}")

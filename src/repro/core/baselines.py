@@ -23,12 +23,21 @@ from repro.core.config import ProberConfig
 
 
 @partial(jax.jit, static_argnames=("n_samples",))
-def sampling_estimate(x, q, tau, key, n_samples: int):
+def sampling_estimate(x, q, tau, key, n_samples: int, n_valid=None):
+    """Uniform-sampling baseline. ``n_valid`` restricts sampling to the live
+    prefix of a capacity-padded corpus (DESIGN.md §10); sampling is then
+    with replacement (the live count is a traced value)."""
     n = x.shape[0]
-    idx = jax.random.choice(key, n, (n_samples,), replace=False)
+    if n_valid is None:
+        idx = jax.random.choice(key, n, (n_samples,), replace=False)
+        scale = float(n)
+    else:
+        u = jax.random.uniform(key, (n_samples,))
+        idx = jnp.minimum((u * n_valid).astype(jnp.int32), n_valid - 1)
+        scale = n_valid.astype(jnp.float32)
     d2 = jnp.sum((x[idx] - q[None]) ** 2, axis=-1)
     frac = jnp.mean((d2 <= tau ** 2).astype(jnp.float32))
-    return frac * n
+    return frac * scale
 
 
 @jax.jit
@@ -45,8 +54,10 @@ def adc_scan_estimate_batch(pq: "pqmod.PQIndex", qs: jax.Array,
     """
     from repro.kernels import ops
     luts = jax.vmap(lambda q: pqmod.adc_table(pq, q))(qs)    # (Q, M, Kc)
-    d2 = ops.adc_batch(pq.codes, luts)                       # (Q, N)
-    return jnp.sum((d2 <= taus[:, None] ** 2).astype(jnp.float32), axis=-1)
+    d2 = ops.adc_batch(pq.codes, luts)                       # (Q, C)
+    live = (jnp.arange(pq.codes.shape[0]) < pq.n_valid)[None, :]
+    hit = (d2 <= taus[:, None] ** 2) & live                  # mask capacity
+    return jnp.sum(hit.astype(jnp.float32), axis=-1)         # padding rows
 
 
 # ------------------------------------------------------ learned baseline ---

@@ -46,6 +46,11 @@ class ProberConfig:
                                # high-throughput serving trade (DESIGN.md §9)
     # --- neighbor lookup (paper §4.7, Alg. 6) ---
     table_max_dist: int = 6    # M: distances above this are not stored
+    # --- dynamic updates / serving ingest (paper §5, DESIGN.md §10) ---
+    ingest_chunk: int = 256    # serve-layer ingest batch: pending points are
+                               # applied in fixed chunks of this size so the
+                               # jitted in-capacity update step never sees a
+                               # new shape (power of two recommended)
     # --- kernels ---
     use_kernels: bool = False  # route hot loops through the Pallas kernels
                                # (native on TPU; interpret=True elsewhere —

@@ -8,6 +8,13 @@
 The state is a pytree (jit/pmap/shard_map friendly). ``use_pq`` switches the
 candidate distance function from exact L2 to PQ-ADC ("Dynamic Prober-PQ").
 
+Dynamic serving (DESIGN.md §10): ``build(..., capacity=C)`` produces a
+capacity-padded state — arrays sized to C rows with ``n_valid`` live — so
+every ``update`` whose points fit in the spare rows is one cached
+fixed-shape jitted step (zero new compilations), and ``estimate`` /
+``estimate_batch`` keep their compiled steps across updates too (the state's
+shapes don't change until a capacity doubling).
+
 Shapes and semantics of the two online entry points:
 
 * ``estimate(state, q, tau, cfg, key) -> ()`` — one query ``q`` of shape
@@ -56,16 +63,41 @@ from repro.core.config import ProberConfig
 
 class ProberState(NamedTuple):
     index: lsh.LSHIndex
-    x: jax.Array                      # (N, d) the dataset (exact distances)
+    x: jax.Array                      # (C, d) the dataset (exact distances;
+                                      #   rows >= n_valid are capacity padding)
     pq: Optional[pqmod.PQIndex]       # None unless cfg.use_pq
+
+    @property
+    def n_valid(self) -> jax.Array:
+        """Live point count — rows below this index are real data
+        (DESIGN.md §10)."""
+        return self.index.n_valid
+
+    @property
+    def capacity(self) -> int:
+        return self.x.shape[0]
 
 
 def build(x: jax.Array, cfg: ProberConfig, key: jax.Array,
-          params: lsh.LSHParams | None = None) -> ProberState:
+          params: lsh.LSHParams | None = None,
+          capacity: int | None = None) -> ProberState:
+    """Offline build. With ``capacity`` (DESIGN.md §10) the state is
+    capacity-padded: arrays sized to ``capacity`` rows with ``x.shape[0]``
+    live, so subsequent :func:`update` calls that fit in the spare rows are
+    fixed-shape jitted steps that never recompile."""
     k1, k2 = jax.random.split(key)
-    index = lsh.build_index(x, cfg, k1, params=params)
-    pq = pqmod.fit(x, cfg, k2) if cfg.use_pq else None
-    return ProberState(index=index, x=x, pq=pq)
+    if capacity is None:
+        index = lsh.build_index(x, cfg, k1, params=params)
+        pq = pqmod.fit(x, cfg, k2) if cfg.use_pq else None
+        return ProberState(index=index, x=x, pq=pq)
+    n = x.shape[0]
+    assert capacity >= n, (capacity, n)
+    x_pad = jnp.pad(jnp.asarray(x, jnp.float32), ((0, capacity - n), (0, 0)))
+    index = lsh.build_index(x_pad, cfg, k1, params=params, n_valid=n)
+    pq = None
+    if cfg.use_pq:
+        pq = pqmod.grow(pqmod.fit(x, cfg, k2), capacity)
+    return ProberState(index=index, x=x_pad, pq=pq)
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -92,15 +124,63 @@ def estimate_batch(state: ProberState, qs: jax.Array, taus: jax.Array,
     return prober.estimate_batch(state.index, state.x, qs, taus, cfg, keys)
 
 
-def update(state: ProberState, x_new: jax.Array, cfg: ProberConfig) -> ProberState:
-    """§5 data updates for every component of the framework."""
-    index = updates.update_lsh(state.index, x_new, cfg)
-    x = jnp.concatenate([state.x, x_new], axis=0)
-    pq = updates.update_pq(state.pq, x_new) if state.pq is not None else None
+@partial(jax.jit, static_argnames=("cfg",))
+def _ingest_step(state: ProberState, x_pad: jax.Array, n_new: jax.Array,
+                 cfg: ProberConfig) -> ProberState:
+    """One fixed-shape §5 update: write the new rows into spare capacity,
+    re-run Alg. 7 over the padded layout, and Alg. 8 with residual refresh.
+    Every output shape equals the input shape, so in-capacity updates reuse
+    this compiled step (DESIGN.md §10)."""
+    nv = state.index.n_valid
+    x = updates._write_rows(state.x, x_pad, nv, n_new)
+    index = updates._lsh_ingest(state.index, x_pad, n_new, cfg)
+    pq = updates._pq_ingest(state.pq, x, x_pad, n_new) \
+        if state.pq is not None else None
     return ProberState(index=index, x=x, pq=pq)
 
 
-def true_cardinality(x: jax.Array, q: jax.Array, tau: jax.Array) -> jax.Array:
-    """Exact ground truth (for tests/benchmarks)."""
+def _grow(state: ProberState, new_capacity: int) -> ProberState:
+    """Amortized-doubling capacity growth: re-pad every per-point array and
+    rebuild the (untrimmed) bucket layout at the new capacity. Recompiles —
+    by design only O(log N) times over any update stream."""
+    cap = state.x.shape[0]
+    x = jnp.pad(state.x, ((0, new_capacity - cap), (0, 0)))
+    index = lsh.grow_capacity(state.index, new_capacity)
+    pq = pqmod.grow(state.pq, new_capacity) if state.pq is not None else None
+    return ProberState(index=index, x=x, pq=pq)
+
+
+def update(state: ProberState, x_new: jax.Array, cfg: ProberConfig,
+           n_valid: int | None = None) -> ProberState:
+    """§5 data updates for every component of the framework.
+
+    If the new points fit in spare capacity this is ONE cached jitted step
+    — zero new compilations (the recompile-free serving contract, tested in
+    tests/test_updates.py). Otherwise capacity doubles first. The batch is
+    padded to the next power of two, so at most log2(max batch) ingest
+    shapes ever compile per capacity.
+
+    ``n_valid`` is an optional host-side hint of the current live count:
+    reading it from the device blocks on the previous step's results, so
+    streaming callers (the serve-layer ingest loop) track the count on the
+    host and keep dispatch fully async.
+    """
+    nn = x_new.shape[0]
+    nv = int(jax.device_get(state.index.n_valid)) if n_valid is None \
+        else int(n_valid)
+    cap = state.x.shape[0]
+    if nv + nn > cap:
+        state = _grow(state, updates.next_capacity(cap, nv + nn))
+    x_pad, n_new = updates._pad_batch(x_new)
+    return _ingest_step(state, x_pad, n_new, cfg)
+
+
+def true_cardinality(x: jax.Array, q: jax.Array, tau: jax.Array,
+                     n_valid: jax.Array | None = None) -> jax.Array:
+    """Exact ground truth (for tests/benchmarks). ``n_valid`` masks the
+    capacity-padding rows of a padded corpus."""
     d2 = jnp.sum((x - q[None, :]) ** 2, axis=-1)
-    return jnp.sum(d2 <= jnp.asarray(tau, jnp.float32) ** 2)
+    hit = d2 <= jnp.asarray(tau, jnp.float32) ** 2
+    if n_valid is not None:
+        hit = hit & (jnp.arange(x.shape[0]) < n_valid)
+    return jnp.sum(hit)

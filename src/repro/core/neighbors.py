@@ -47,6 +47,16 @@ def ring(table: NeighborTable, i: jax.Array, k: jax.Array) -> jax.Array:
     return table.dists[i] == k.astype(jnp.int8)
 
 
+def grow(table: NeighborTable, new_capacity: int) -> NeighborTable:
+    """Re-pad the table to a larger code capacity (DESIGN.md §10). Padding
+    entries are 0 (= not stored) and sit beyond ``n``, so every ``ring``
+    lookup is unchanged."""
+    cap = table.dists.shape[0]
+    assert new_capacity >= cap, (new_capacity, cap)
+    pad = new_capacity - cap
+    return table._replace(dists=jnp.pad(table.dists, ((0, pad), (0, pad))))
+
+
 def update(table: NeighborTable, codes_all: jax.Array, n_old: jax.Array,
            n_new_total: jax.Array) -> NeighborTable:
     """Alg. 9: extend the table with new codes C1 = codes_all[n_old:n_total].
@@ -54,6 +64,13 @@ def update(table: NeighborTable, codes_all: jax.Array, n_old: jax.Array,
     Computes new-vs-old and new-vs-new blocks only; the old-vs-old block is
     reused untouched (the point of the incremental algorithm). ``codes_all``
     must be the concatenated (B', K) array with the original codes first.
+
+    Capacity-padded path (DESIGN.md §10): when ``codes_all`` shares the
+    table's capacity (B' == B, padding rows past ``n_new_total`` carrying
+    any value — they are masked), every shape here is fixed and
+    ``n_old``/``n_new_total`` may be traced scalars, so the step jits once
+    and never recompiles while updates fit in capacity (grow first via
+    :func:`grow`).
     """
     b = codes_all.shape[0]
     d = _pairwise_hamming(codes_all, codes_all)

@@ -22,11 +22,13 @@ from repro.core.config import ProberConfig
 
 class PQIndex(NamedTuple):
     centroids: jax.Array   # (M, Kc, ds) float32
-    codes: jax.Array       # (N, M) uint8 — Kc <= 256; byte codes keep the
+    codes: jax.Array       # (C, M) uint8 — Kc <= 256; byte codes keep the
                            # scan cache-resident (DESIGN.md §9)
     counts: jax.Array      # (M, Kc) float32 — for incremental updates (Alg. 8)
-    resid: jax.Array       # (N,) float32 — ||x - q(x)|| quantization residual
+    resid: jax.Array       # (C,) float32 — ||x - q(x)|| quantization residual
                            # (beyond-paper: enables banded ADC qualification)
+    n_valid: jax.Array     # () int32 — live points; rows >= n_valid of
+                           # codes/resid are capacity padding (DESIGN.md §10)
 
     @property
     def m(self) -> int:
@@ -35,6 +37,10 @@ class PQIndex(NamedTuple):
     @property
     def kc(self) -> int:
         return self.centroids.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return self.codes.shape[0]
 
 
 def split_subspaces(x: jax.Array, m: int) -> jax.Array:
@@ -83,7 +89,19 @@ def fit(x: jax.Array, cfg: ProberConfig, key: jax.Array) -> PQIndex:
                                  num_segments=m * kc).reshape(m, kc)
     resid = reconstruction_residual(centroids, codes, xs)
     return PQIndex(centroids=centroids, codes=codes.astype(jnp.uint8),
-                   counts=counts, resid=resid)
+                   counts=counts, resid=resid,
+                   n_valid=jnp.asarray(n, jnp.int32))
+
+
+def grow(pq: PQIndex, new_capacity: int) -> PQIndex:
+    """Re-pad codes/resid to a larger capacity (DESIGN.md §10). Padding rows
+    are zeros — never read, because candidate ids only ever come from valid
+    LSH buckets and the scan baseline masks by ``n_valid``."""
+    cap = pq.codes.shape[0]
+    assert new_capacity >= cap, (new_capacity, cap)
+    pad = new_capacity - cap
+    return pq._replace(codes=jnp.pad(pq.codes, ((0, pad), (0, 0))),
+                       resid=jnp.pad(pq.resid, ((0, pad),)))
 
 
 def reconstruction_residual(centroids: jax.Array, codes: jax.Array,

@@ -31,7 +31,14 @@ QualFn = Callable[[jax.Array], jax.Array]
 
 
 class TableView(NamedTuple):
-    """One hash table's slice of the index (leading L axis stripped)."""
+    """One hash table's slice of the index (leading L axis stripped).
+
+    Capacity padding (DESIGN.md §10) needs no extra plumbing here: dead
+    point rows live in the sentinel bucket at row ``n_buckets``, and every
+    ring op below masks the bucket axis by ``n_buckets`` (via
+    ``hamming_to_buckets``'s K+1 distance), so rings, gathers and the
+    central count only ever see live points.
+    """
     order: jax.Array          # (N,)
     bucket_codes: jax.Array   # (B, K)
     bucket_starts: jax.Array  # (B,)

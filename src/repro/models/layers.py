@@ -275,22 +275,35 @@ def kv_dequantize(q, s, dtype):
 
 def cached_decode_attention_q8(p, x, ck, cv, ks, vs, pos, cfg: ModelConfig):
     """Decode against an int8-quantized cache. ck/cv (B,S,KV,hd) int8,
-    ks/vs (B,S,KV) f32. Returns (out, ck, cv, ks, vs)."""
+    ks/vs (B,S,KV) f32. Returns (out, ck, cv, ks, vs). ``pos`` is a scalar
+    or per-sequence (B,) write position (see cached_decode_attention)."""
     b = x.shape[0]
     s_max = ck.shape[1]
-    write = pos % s_max if cfg.window else pos
-    rope_pos = jnp.full((b, 1), pos)
-    q, k, v = qkv_project(p, x, cfg, rope_pos)
-    k8, k_s = kv_quantize(k)
-    v8, v_s = kv_quantize(v)
-    ck = jax.lax.dynamic_update_slice_in_dim(ck, k8, write, axis=1)
-    cv = jax.lax.dynamic_update_slice_in_dim(cv, v8, write, axis=1)
-    ks = jax.lax.dynamic_update_slice_in_dim(ks, k_s, write, axis=1)
-    vs = jax.lax.dynamic_update_slice_in_dim(vs, v_s, write, axis=1)
+    pos = jnp.asarray(pos)
+    if pos.ndim == 0:
+        write = pos % s_max if cfg.window else pos
+        rope_pos = jnp.full((b, 1), pos)
+        q, k, v = qkv_project(p, x, cfg, rope_pos)
+        k8, k_s = kv_quantize(k)
+        v8, v_s = kv_quantize(v)
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k8, write, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v8, write, axis=1)
+        ks = jax.lax.dynamic_update_slice_in_dim(ks, k_s, write, axis=1)
+        vs = jax.lax.dynamic_update_slice_in_dim(vs, v_s, write, axis=1)
+        mask = (jnp.arange(s_max) <= pos)[None, None, None, :]
+    else:
+        write = pos % s_max if cfg.window else pos
+        rows = jnp.arange(b)
+        q, k, v = qkv_project(p, x, cfg, pos[:, None])
+        k8, k_s = kv_quantize(k)
+        v8, v_s = kv_quantize(v)
+        ck = ck.at[rows, write].set(k8[:, 0])
+        cv = cv.at[rows, write].set(v8[:, 0])
+        ks = ks.at[rows, write].set(k_s[:, 0])
+        vs = vs.at[rows, write].set(v_s[:, 0])
+        mask = (jnp.arange(s_max)[None, :] <= pos[:, None])[:, None, None, :]
     kf = kv_dequantize(ck, ks, q.dtype)
     vf = kv_dequantize(cv, vs, q.dtype)
-    kpos = jnp.arange(s_max)
-    mask = (kpos <= pos)[None, None, None, :]
     out = _sdpa(q, kf, vf, mask, cfg)
     return out @ p["wo"].astype(x.dtype), ck, cv, ks, vs
 
@@ -298,21 +311,36 @@ def cached_decode_attention_q8(p, x, ck, cv, ks, vs, pos, cfg: ModelConfig):
 def cached_decode_attention(p, x, cache_k, cache_v, pos, cfg: ModelConfig):
     """One-token decode against a (B, S_max, KV, hd) cache.
 
-    Returns (out (B, 1, D), new_k, new_v). ``pos`` is the write position.
+    Returns (out (B, 1, D), new_k, new_v). ``pos`` is the write position —
+    a scalar applied to every sequence, or a (B,) vector of per-sequence
+    positions (continuous batching: each serving slot decodes at its own
+    depth, so RoPE phase, cache write row and the causal mask must all be
+    per-slot; see serve/engine.py).
     If cfg.window > 0 the cache is a ring buffer of size S_max (= window).
     """
     b = x.shape[0]
     s_max = cache_k.shape[1]
-    write = pos % s_max if cfg.window else pos
-    rope_pos = jnp.full((b, 1), pos)
-    q, k, v = qkv_project(p, x, cfg, rope_pos)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), write, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), write, axis=1)
+    pos = jnp.asarray(pos)
     kpos = jnp.arange(s_max)
     # slots written so far; for the ring buffer (window mode) every slot is
     # valid once pos >= s_max and they are exactly the last s_max tokens —
     # attention is permutation-invariant over keys so ring order is fine
-    mask = (kpos <= pos)[None, None, None, :]
+    if pos.ndim == 0:
+        write = pos % s_max if cfg.window else pos
+        rope_pos = jnp.full((b, 1), pos)
+        q, k, v = qkv_project(p, x, cfg, rope_pos)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k.astype(cache_k.dtype), write, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v.astype(cache_v.dtype), write, axis=1)
+        mask = (kpos <= pos)[None, None, None, :]
+    else:
+        write = pos % s_max if cfg.window else pos
+        rows = jnp.arange(b)
+        q, k, v = qkv_project(p, x, cfg, pos[:, None])
+        cache_k = cache_k.at[rows, write].set(k[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, write].set(v[:, 0].astype(cache_v.dtype))
+        mask = (kpos[None, :] <= pos[:, None])[:, None, None, :]
     out = _sdpa(q, cache_k.astype(q.dtype), cache_v.astype(q.dtype), mask, cfg)
     return out @ p["wo"].astype(x.dtype), cache_k, cache_v
 

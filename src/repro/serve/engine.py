@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import estimator as E
+from repro.core import estimator as E, updates
 from repro.core.config import ProberConfig
 from repro.models import get_family
 from repro.models.base import ModelConfig
@@ -51,17 +51,30 @@ class CardinalityCoalescer:
 
     def __init__(self, state: E.ProberState, cfg: ProberConfig,
                  key: jax.Array, max_batch: int = 256):
-        self.state = state
+        self.state = state              # property: also syncs _n_valid
         self.cfg = cfg
         self.key = key
         # round up to a power of two: padding in flush() must never exceed
         # the configured cap, or the compile-shape bound above breaks
-        self.max_batch = self._pad_to(max_batch)
+        self.max_batch = updates.next_pow2(max_batch)
         self.pending: list[CardRequest] = []
         self._next_rid = 0
         self._n_flushes = 0
         self._answered: dict[int, float] = {}   # auto-flush results not yet
                                                 # returned by flush()
+        self._ingest_buf: Optional[np.ndarray] = None   # pending new points
+
+    @property
+    def state(self) -> E.ProberState:
+        return self._state
+
+    @state.setter
+    def state(self, st: E.ProberState):
+        # re-reads the live count whenever the state is swapped from outside;
+        # the internal ingest loop bypasses this (tracking the count on the
+        # host) so chunk dispatch never blocks on a device_get
+        self._state = st
+        self._n_valid = int(jax.device_get(st.index.n_valid))
 
     def submit(self, q, tau) -> CardRequest:
         req = CardRequest(rid=self._next_rid, q=np.asarray(q),
@@ -72,30 +85,59 @@ class CardinalityCoalescer:
             self._answered.update(self._drain())
         return req
 
-    @staticmethod
-    def _pad_to(n: int) -> int:
-        p = 1
-        while p < n:
-            p *= 2
-        return p
+    # ------------------------------------------------- dynamic ingest -----
+    def ingest(self, x_new) -> int:
+        """Queue new corpus points (paper §5) for the serving index.
+
+        Points are buffered and applied through the recompile-free
+        capacity-padded update step (DESIGN.md §10) in fixed chunks of
+        ``cfg.ingest_chunk`` — eagerly once a full chunk accumulates, and
+        always before the next estimate flush, so every estimate reflects
+        all points ingested before it. Returns the number still buffered.
+        """
+        x = np.asarray(x_new, np.float32)
+        if x.ndim == 1:
+            x = x[None]
+        self._ingest_buf = x if self._ingest_buf is None else \
+            np.concatenate([self._ingest_buf, x], axis=0)
+        chunk = self.cfg.ingest_chunk
+        while self._ingest_buf is not None and len(self._ingest_buf) >= chunk:
+            self._apply_ingest_chunk(chunk)
+        return 0 if self._ingest_buf is None else len(self._ingest_buf)
+
+    def apply_ingest(self):
+        """Drain the ingest buffer completely (the final partial chunk is
+        padded to a power of two inside estimator.update)."""
+        chunk = self.cfg.ingest_chunk
+        while self._ingest_buf is not None and len(self._ingest_buf) > 0:
+            self._apply_ingest_chunk(min(chunk, len(self._ingest_buf)))
+
+    def _apply_ingest_chunk(self, k: int):
+        buf = self._ingest_buf
+        part, rest = buf[:k], buf[k:]
+        self._ingest_buf = rest if len(rest) else None
+        self._state = E.update(self._state, jnp.asarray(part), self.cfg,
+                               n_valid=self._n_valid)
+        self._n_valid += len(part)
 
     def flush(self) -> dict[int, float]:
-        """Jitted estimate_batch steps (max_batch each) until nothing is
-        pending; returns every answered {rid: estimate} not yet returned —
-        including requests already answered by a submit()-triggered
-        auto-flush."""
+        """Apply pending ingests, then run jitted estimate_batch steps
+        (max_batch each) until nothing is pending; returns every answered
+        {rid: estimate} not yet returned — including requests already
+        answered by a submit()-triggered auto-flush."""
         out = self._answered
         self._answered = {}
         out.update(self._drain())
         return out
 
     def _drain(self) -> dict[int, float]:
+        self.apply_ingest()          # estimates see every prior ingest()
         out: dict[int, float] = {}
         while self.pending:
             batch, self.pending = self.pending[:self.max_batch], \
                 self.pending[self.max_batch:]
             n = len(batch)
-            p = self._pad_to(n)
+            p = updates.next_pow2(n)
             d = batch[0].q.shape[-1]
             qs = np.zeros((p, d), np.float32)
             taus = np.zeros((p,), np.float32)
@@ -132,8 +174,14 @@ class ServeEngine:
         self.max_len = max_len
         self.eos = eos
         self.cache = self.fam.init_cache(cfg, batch_slots, max_len)
+        # per-slot decode positions: slots prefill at different times with
+        # different prompt lengths, so a shared scalar position would make a
+        # slot admitted after a longer request write its KV at the wrong row
+        # and retire early (RoPE phase and the causal mask also depend on it)
+        self.cache["pos"] = jnp.zeros((batch_slots,), jnp.int32)
         self.live: list[Optional[Request]] = [None] * batch_slots
         self.queue: list[Request] = []
+        self.finished: list[Request] = []     # retired but not yet returned
         self._decode = jax.jit(
             lambda p, c, t: self.fam.decode_step(p, c, t, cfg))
         self._prefill_one = jax.jit(
@@ -148,11 +196,12 @@ class ServeEngine:
                 req = self.queue.pop(0)
                 cache_i, logits = self._prefill_one(
                     self.params, {"tokens": jnp.asarray(req.prompt)[None, :]})
-                # copy the single-sequence cache into slot i
+                # copy the single-sequence cache into slot i; position is
+                # per-slot — only slot i takes the new request's length
                 self.cache = {
                     "k": self.cache["k"].at[:, i].set(cache_i["k"][:, 0]),
                     "v": self.cache["v"].at[:, i].set(cache_i["v"][:, 0]),
-                    "pos": jnp.maximum(self.cache["pos"], cache_i["pos"]),
+                    "pos": self.cache["pos"].at[i].set(cache_i["pos"]),
                 }
                 req.out.append(int(jnp.argmax(logits[0])))
                 self.live[i] = req
@@ -166,26 +215,27 @@ class ServeEngine:
             [r.out[-1] if r else 0 for r in self.live], jnp.int32)
         logits, self.cache = self._decode(self.params, self.cache, tokens)
         nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        pos = np.asarray(self.cache["pos"])       # already advanced by decode
         for i, req in enumerate(self.live):
             if req is None:
                 continue
             tok = int(nxt[i])
             req.out.append(tok)
             if tok == self.eos or len(req.out) >= req.max_new or \
-                    int(self.cache["pos"]) >= self.max_len - 1:
+                    int(pos[i]) >= self.max_len - 1:
                 req.done = True
                 self.live[i] = None
+                self.finished.append(req)
         return True
 
     def run(self, max_steps: int = 512) -> list[Request]:
-        finished: list[Request] = []
-        seen: set[int] = set()
-        all_reqs = list(self.queue)
+        """Drive decode steps until idle; returns every request finished
+        during the run — tracked as slots retire, so requests that were
+        already admitted to a slot before run() or submitted while it is
+        stepping are returned too (a queue snapshot at entry would miss
+        both)."""
         for _ in range(max_steps):
             if not self.step() and not self.queue:
                 break
-        for r in all_reqs:
-            if r.done and r.rid not in seen:
-                finished.append(r)
-                seen.add(r.rid)
+        finished, self.finished = self.finished, []
         return finished

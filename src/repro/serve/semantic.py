@@ -38,20 +38,25 @@ class OperatorPlan:
 class SemanticPlanner:
     def __init__(self, corpus_embeddings, cfg: ProberConfig, key,
                  max_calls: int = 512, slot_budget: int = 8,
-                 max_batch: int = 256):
+                 max_batch: int = 256, capacity: int | None = None):
         self.cfg = cfg
         self.max_calls = max_calls
         self.slot_budget = slot_budget
-        self.state = E.build(corpus_embeddings, cfg, key)
+        # capacity-padded build (DESIGN.md §10): leave spare rows so corpus
+        # updates are recompile-free jitted steps instead of rebuilds
+        self.state = E.build(corpus_embeddings, cfg, key, capacity=capacity)
         self._key = key
         self._coalescer = CardinalityCoalescer(self.state, cfg, key,
                                                max_batch=max_batch)
 
     def update_corpus(self, new_embeddings):
         """Dynamic data updates (paper §5) keep the planner fresh without a
-        rebuild — the whole point of the non-learned estimator."""
-        self.state = E.update(self.state, new_embeddings, self.cfg)
-        self._coalescer.state = self.state
+        rebuild — the whole point of the non-learned estimator. Routed
+        through the coalescer's ingest path: fixed-chunk capacity-padded
+        update steps (DESIGN.md §10), applied before the next estimate."""
+        self._coalescer.ingest(new_embeddings)
+        self._coalescer.apply_ingest()
+        self.state = self._coalescer.state
 
     def estimate(self, q, tau) -> float:
         self._key, sub = jax.random.split(self._key)

@@ -104,3 +104,33 @@ def test_lexsort_rows_sorted():
     s = np.asarray(rows[perm])
     for i in range(1, len(s)):
         assert tuple(s[i - 1]) <= tuple(s[i])
+
+
+def _check_lexsorted(rows, perm, n_live=None):
+    s = np.asarray(rows)[np.asarray(perm)]
+    n_live = len(s) if n_live is None else n_live
+    for i in range(1, n_live):
+        assert tuple(s[i - 1]) <= tuple(s[i]), i
+
+
+def test_lexsort_packed_fast_path_matches_generic():
+    """The rank-compressed single-sort fast path (DESIGN.md §10) must agree
+    with the K-pass column sort on every regime: small codes (packed),
+    wide/negative codes (fallback), and capacity-masked rows (sentinel keys
+    sort last)."""
+    key = jax.random.PRNGKey(5)
+    # small range incl. negatives -> packed path
+    rows = jax.random.randint(key, (257, 7), -3, 4)
+    _check_lexsorted(rows, lsh.lexsort_rows(rows))
+    # wide range -> fallback path
+    wide = jax.random.randint(key, (200, 4), -2**20, 2**20)
+    _check_lexsorted(wide, lsh.lexsort_rows(wide))
+    # masked rows: live prefix sorted, dead rows all at the tail
+    n, n_live = 128, 90
+    codes = np.array(jax.random.randint(key, (n, 6), 0, 5))
+    codes[n_live:] = lsh.CODE_SENTINEL
+    valid = jnp.arange(n) < n_live
+    perm = np.asarray(lsh.lexsort_rows(jnp.asarray(codes), valid=valid))
+    assert sorted(perm.tolist()) == list(range(n))
+    assert set(perm[n_live:].tolist()) == set(range(n_live, n))
+    _check_lexsorted(codes, perm, n_live)

@@ -76,8 +76,9 @@ def test_update_pq_running_means(fitted):
     x, pq = fitted
     key = jax.random.PRNGKey(9)
     x_new = jax.random.normal(key, (200, 32)) + 2.0
-    pq2 = updates.update_pq(pq, x_new)
+    pq2 = updates.update_pq(pq, x_new, jnp.concatenate([x, x_new], axis=0))
     assert pq2.codes.shape == (800, 4)
+    assert int(pq2.n_valid) == 800
     assert float(jnp.sum(pq2.counts)) == 800 * 4
     assert pq2.resid.shape == (800,)
     # new points' codes are nearest of the OLD centroids (paper's rule)
@@ -85,6 +86,23 @@ def test_update_pq_running_means(fitted):
     np.testing.assert_array_equal(
         np.asarray(pqmod.assign(pq.centroids, xs)),
         np.asarray(pq2.codes[600:]))
+
+
+def test_update_pq_residuals_consistent_after_centroid_move(fitted):
+    """Regression: the incremental-mean update moves centroids, so EVERY
+    live point's stored residual must equal ||x - q(x)|| under the moved
+    codebook — old points used to keep pre-update residuals."""
+    x, pq = fitted
+    x_new = jax.random.normal(jax.random.PRNGKey(5), (150, 32)) + 1.5
+    x_all = jnp.concatenate([x, x_new], axis=0)
+    pq2 = updates.update_pq(pq, x_new, x_all)
+    want = pqmod.reconstruction_residual(
+        pq2.centroids, pq2.codes.astype(jnp.int32),
+        pqmod.split_subspaces(x_all, pq2.m))
+    np.testing.assert_allclose(np.asarray(pq2.resid), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    # and the old points' centroids really did move (the test's premise)
+    assert float(jnp.max(jnp.abs(pq2.centroids - pq.centroids))) > 1e-3
 
 
 def test_update_equivalent_mass():
@@ -95,7 +113,7 @@ def test_update_equivalent_mass():
     cfg = ProberConfig(pq_m=2, pq_kc=4, pq_iters=5)
     pq1 = pqmod.fit(x1, cfg, key)
     x2 = jax.random.normal(jax.random.PRNGKey(2), (50, 8)) * 0.1
-    pq2 = updates.update_pq(pq1, x2)
+    pq2 = updates.update_pq(pq1, x2, jnp.concatenate([x1, x2], axis=0))
     # manual: c' = (c*n + sum_new)/(n + n_new) per (m, k)
     xs = pqmod.split_subspaces(x2, 2)
     codes = pqmod.assign(pq1.centroids, xs)

@@ -117,7 +117,8 @@ def test_updates_preserve_accuracy(ds):
     n0 = int(n * 0.3) // 4 * 4
     st = E.build(ds.x[:n0], CFG, jax.random.PRNGKey(0))
     st = E.update(st, ds.x[n0:], CFG)
-    assert st.index.n_points == n
+    assert int(st.index.n_valid) == n
+    assert st.index.capacity >= n
     qerrs = []
     for qi in range(4):
         for t in range(0, ds.taus.shape[1], 3):
