@@ -12,12 +12,12 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 import jax                                             # noqa: E402
 import jax.numpy as jnp                                # noqa: E402
 
+from repro import compat                               # noqa: E402
 from repro.core import distributed as D, estimator as E  # noqa: E402
 from repro.core.config import ProberConfig             # noqa: E402
 
 print("devices:", len(jax.devices()))
-mesh = jax.make_mesh((8,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = compat.make_mesh((8,), ("data",))
 
 key = jax.random.PRNGKey(0)
 x = jax.random.normal(key, (16000, 64))
@@ -30,7 +30,10 @@ print("sharded index built: 8 local partitions of", x.shape[0] // 8)
 qs = x[:4] + 0.01
 d2 = jnp.sort(jnp.sum((x - qs[0][None]) ** 2, axis=-1))
 taus = jnp.sqrt(d2[jnp.array([10, 100, 500, 2000])]) + 1e-6
-ests = D.estimate_sharded(state, qs[:1].repeat(4, 0), taus, cfg, key, mesh)
-for i, t in enumerate([10, 100, 500, 2000]):
-    true = float(E.true_cardinality(x, qs[0], taus[i]))
-    print(f"target={t:5d} estimate={float(ests[i]):8.1f} true={true:6.0f}")
+for mode in ("local", "sync"):
+    ests = D.estimate_sharded(state, qs[:1].repeat(4, 0), taus, cfg, key,
+                              mesh, mode=mode)
+    for i, t in enumerate([10, 100, 500, 2000]):
+        true = float(E.true_cardinality(x, qs[0], taus[i]))
+        print(f"[{mode}] target={t:5d} estimate={float(ests[i]):8.1f} "
+              f"true={true:6.0f}")

@@ -1,0 +1,93 @@
+"""jax version-compat surface for the multi-device path (DESIGN.md §4).
+
+The distributed Dynamic Prober targets the modern sharding API
+(``jax.shard_map`` with ``check_vma``, ``jax.make_mesh`` with
+``axis_types``), but the pinned image ships jax 0.4.37 where
+
+* ``shard_map`` lives in ``jax.experimental.shard_map`` and its replication
+  check is spelled ``check_rep`` (renamed ``check_vma`` in jax >= 0.7);
+* ``jax.make_mesh`` exists but takes no ``axis_types`` kwarg, and
+  ``jax.sharding.AxisType`` does not exist at all.
+
+Every mesh/shard_map construction in this repo goes through the two
+dispatchers below instead of touching ``jax.*`` directly, so the same code
+runs on the pinned version and on current jax without conditionals at the
+call sites. Dispatch is by feature probe (``inspect.signature``), not
+version string parsing — point releases have moved these kwargs around.
+"""
+from __future__ import annotations
+
+import inspect
+from typing import Any, Callable, Sequence
+
+import jax
+
+__all__ = ["shard_map", "make_mesh", "auto_axis_types"]
+
+
+def _kwargs_of(fn: Callable) -> set[str]:
+    try:
+        return set(inspect.signature(fn).parameters)
+    except (TypeError, ValueError):      # C-implemented / exotic callables
+        return set()
+
+
+def auto_axis_types(n_axes: int):
+    """``(AxisType.Auto,) * n_axes`` where the enum exists, else None."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return None
+    return (axis_type.Auto,) * n_axes
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str],
+              *, devices=None) -> jax.sharding.Mesh:
+    """``jax.make_mesh`` with Auto axis types where the kwarg exists.
+
+    On jax >= 0.5 explicit ``axis_types=(AxisType.Auto, ...)`` keeps the
+    mesh out of the sharding-in-types ("explicit") mode this codebase does
+    not use; on 0.4.x the kwarg (and the enum) don't exist and Auto is the
+    only behaviour, so it is simply dropped.
+    """
+    kwargs: dict[str, Any] = {}
+    if devices is not None:
+        kwargs["devices"] = devices
+    accepted = _kwargs_of(jax.make_mesh)
+    if "axis_types" in accepted:
+        types = auto_axis_types(len(tuple(axis_names)))
+        if types is not None:
+            kwargs["axis_types"] = types
+    return jax.make_mesh(tuple(axis_shapes), tuple(axis_names), **kwargs)
+
+
+def _resolve_shard_map() -> tuple[Callable, str | None]:
+    """The callable plus the name of its replication-check kwarg."""
+    fn = getattr(jax, "shard_map", None)
+    if fn is None:
+        from jax.experimental.shard_map import shard_map as fn  # 0.4.x
+    accepted = _kwargs_of(fn)
+    for name in ("check_vma", "check_rep"):
+        if name in accepted:
+            return fn, name
+    return fn, None
+
+
+def shard_map(f: Callable | None = None, *, mesh, in_specs, out_specs,
+              check_vma: bool = True) -> Callable:
+    """Version-dispatching ``shard_map``.
+
+    Accepts the modern ``check_vma`` spelling and translates it to
+    ``check_rep`` on jax 0.4.x (semantics are the same: statically verify
+    that out_specs-replicated outputs really are replicated — the
+    distributed prober disables it because its psum-free build step returns
+    per-shard values the checker cannot prove replicated). Usable directly
+    or as ``partial``-style decorator, mirroring ``jax.shard_map``.
+    """
+    fn, check_kw = _resolve_shard_map()
+    kwargs: dict[str, Any] = dict(mesh=mesh, in_specs=in_specs,
+                                  out_specs=out_specs)
+    if check_kw is not None:
+        kwargs[check_kw] = check_vma
+    if f is None:
+        return lambda g: fn(g, **kwargs)
+    return fn(f, **kwargs)

@@ -124,19 +124,49 @@ def estimate_batch(state: ProberState, qs: jax.Array, taus: jax.Array,
     return prober.estimate_batch(state.index, state.x, qs, taus, cfg, keys)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _ingest_step(state: ProberState, x_pad: jax.Array, n_new: jax.Array,
-                 cfg: ProberConfig) -> ProberState:
+def estimate_batch_pooled(state: ProberState, qs: jax.Array, taus: jax.Array,
+                          cfg: ProberConfig, key: jax.Array,
+                          axis_name) -> jax.Array:
+    """Distributed "sync" stopping mode (DESIGN.md §4): ``estimate_batch``
+    with the per-round (w, w') Chernoff statistics pooled across the shards
+    of the mesh axis ``axis_name``, so the ε-test sees GLOBAL selectivity.
+
+    Must be called *inside* a shard_map over ``axis_name`` with ``state``
+    holding the local shard (``distributed.estimate_sharded(mode="sync")``
+    is the public entry point). Returns the global (Q,) estimates,
+    replicated on every shard — no trailing psum needed.
+    """
+    keys = jax.random.split(key, qs.shape[0])
+    axis_name = axis_name if isinstance(axis_name, str) else tuple(axis_name)
+    if cfg.use_pq and state.pq is not None:
+        luts = jax.vmap(lambda q: pqmod.adc_table(state.pq, q))(qs)
+        return prober.estimate_batch(state.index, state.x, qs, taus, cfg,
+                                     keys, pq_codes=state.pq.codes,
+                                     pq_luts=luts, pq_resid=state.pq.resid,
+                                     axis_name=axis_name)
+    return prober.estimate_batch(state.index, state.x, qs, taus, cfg, keys,
+                                 axis_name=axis_name)
+
+
+def _ingest_core(state: ProberState, x_pad: jax.Array, n_new: jax.Array,
+                 cfg: ProberConfig, axis_name=None) -> ProberState:
     """One fixed-shape §5 update: write the new rows into spare capacity,
     re-run Alg. 7 over the padded layout, and Alg. 8 with residual refresh.
     Every output shape equals the input shape, so in-capacity updates reuse
-    this compiled step (DESIGN.md §10)."""
+    one compiled step (DESIGN.md §10). The single shared body for the
+    single-device (:func:`update`) and sharded
+    (``distributed.update_sharded``) paths — ``axis_name`` pools Alg. 7's W
+    renormalisation across that mesh axis (DESIGN.md §4)."""
     nv = state.index.n_valid
     x = updates._write_rows(state.x, x_pad, nv, n_new)
-    index = updates._lsh_ingest(state.index, x_pad, n_new, cfg)
+    index = updates._lsh_ingest(state.index, x_pad, n_new, cfg,
+                                axis_name=axis_name)
     pq = updates._pq_ingest(state.pq, x, x_pad, n_new) \
         if state.pq is not None else None
     return ProberState(index=index, x=x, pq=pq)
+
+
+_ingest_step = jax.jit(_ingest_core, static_argnames=("cfg", "axis_name"))
 
 
 def _grow(state: ProberState, new_capacity: int) -> ProberState:

@@ -105,12 +105,17 @@ def project(params: LSHParams, x: jax.Array) -> jax.Array:
 
 
 def normalize_w(raw: jax.Array, n_regions: int,
-                n_valid: jax.Array | None = None) -> jax.Array:
+                n_valid: jax.Array | None = None,
+                axis_name=None) -> jax.Array:
     """Paper Alg. 7 ``normalizeW``: per-function width from the min/max of the
     raw projections so each function yields ~``n_regions`` distinct values.
 
     ``n_valid`` masks capacity-padding rows (DESIGN.md §10) out of the
-    min/max so dead rows never influence the bucket widths.
+    min/max so dead rows never influence the bucket widths. Under shard_map
+    (DESIGN.md §4) ``axis_name`` pools the extremes across the data shards
+    with a pmin/pmax, so a sharded ingest renormalises ``W`` from the
+    min/max of ALL live projections — exactly the global Alg. 7 semantics —
+    and every shard keeps bit-identical hash functions.
     """
     if n_valid is None:
         lo = jnp.min(raw, axis=0)
@@ -119,6 +124,9 @@ def normalize_w(raw: jax.Array, n_regions: int,
         valid = (jnp.arange(raw.shape[0]) < n_valid)[:, None]
         lo = jnp.min(jnp.where(valid, raw, jnp.inf), axis=0)
         hi = jnp.max(jnp.where(valid, raw, -jnp.inf), axis=0)
+    if axis_name is not None:
+        lo = jax.lax.pmin(lo, axis_name)
+        hi = jax.lax.pmax(hi, axis_name)
     return jnp.maximum((hi - lo) / float(n_regions), 1e-6)
 
 

@@ -130,8 +130,22 @@ def _count_central(view: TableView, cum0: jax.Array, qualfn: QualFn,
 def estimate_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
                        cfg: ProberConfig, key: jax.Array,
                        central_qualfn: QualFn | None = None,
-                       exact_qualfn: QualFn | None = None):
+                       exact_qualfn: QualFn | None = None,
+                       axis_name=None):
     """Alg. 1: central bucket exactly, then rings k = 1..K adaptively.
+
+    ``axis_name`` switches on the distributed *pooled-stopping* ("sync")
+    mode (DESIGN.md §4): inside a shard_map over that mesh axis, the
+    per-slab (w, w') Chernoff statistics are pooled with ONE small psum per
+    ``while_loop`` iteration, so the ε-test of §4.5 sees the GLOBAL
+    selectivity instead of each shard's local one. Every control decision
+    (schedule anchors, ring advance, PTF, termination) is derived from the
+    pooled values only, so all shards run the loop in lockstep — which is
+    also what makes the in-loop collective legal. The returned estimate is
+    the global one, identical (replicated) on every shard; ``nvisited``
+    counts globally pooled samples, so the visit budget is scaled to
+    ``cfg.max_visit`` × shards — max_visit keeps its per-shard meaning and
+    the mesh spends the same total budget in both stopping modes.
 
     ``central_qualfn`` lets f_central stay exact (Alg. 3 is brute force —
     the paper applies ADC only inside f_neighbor) while rings use ADC;
@@ -179,7 +193,26 @@ def estimate_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
     # schedule anchors per ring (Alg. 2 line 8): w_1 = ceil(s1 * |N_k|)
     w_caps = jnp.minimum(jnp.ceil(cfg.s_max * totals_f),
                          caps.astype(jnp.float32))
-    first_targets = jnp.maximum(jnp.ceil(cfg.s1 * totals_f), 1.0)
+    totals_sched = totals_f
+    visit_budget = jnp.int32(cfg.max_visit)
+    if axis_name is not None:
+        # pooled-stopping mode: the central count, schedule anchors and
+        # sample caps become GLOBAL, so every stopping decision below is
+        # shard-invariant (the PRP domains/caps above stay local — each
+        # shard still samples only its own candidates). ``totals_f`` itself
+        # stays LOCAL: each shard's ring estimate |N_k,s|·p̂_s is unbiased
+        # under its own uniform sampling, and the psum of those is the
+        # global ring count — pooling p̂ instead would overweight shards
+        # that sample a larger fraction of their ring.
+        est0 = jax.lax.psum(est0, axis_name)
+        visited0 = jax.lax.psum(visited0, axis_name)
+        totals_sched = jax.lax.psum(totals_f, axis_name)
+        w_caps = jax.lax.psum(w_caps, axis_name)
+        # nvisited pools globally here, so scale the visit budget by the
+        # axis size — cfg.max_visit keeps its per-shard meaning and the
+        # mesh gets the same total budget in both stopping modes
+        visit_budget = visit_budget * jax.lax.psum(jnp.int32(1), axis_name)
+    first_targets = jnp.maximum(jnp.ceil(cfg.s1 * totals_sched), 1.0)
 
     a = cfg.a_const
     chunk = cfg.chunk
@@ -211,8 +244,27 @@ def estimate_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
             ring_fn = qualfn
         wq = s["wq"] + jnp.sum(ring_fn(sl) * ok)
         w = s["w"] + jnp.sum(ok)
-        wf = w.astype(jnp.float32)
-        p_hat = wq / jnp.maximum(wf, 1.0)
+        exhausted = (ci + 1) * chunk >= p_ring     # local PRP domain walked
+        # per-shard unbiased ring estimate |N_k|·p̂ (== the pooled one when
+        # axis_name is None)
+        ring_est = totals_f[row] * wq / jnp.maximum(w.astype(jnp.float32),
+                                                    1.0)
+        if axis_name is None:
+            wf, wq_pool, all_exhausted = w.astype(jnp.float32), wq, exhausted
+        else:
+            # ONE small psum pools this slab's (w, w') Chernoff statistics,
+            # the exhaustion vote and the weighted ring estimate; every
+            # stopping quantity below derives from it, so the loop stays in
+            # lockstep across shards
+            pooled = jax.lax.psum(
+                jnp.stack([w.astype(jnp.float32), wq,
+                           exhausted.astype(jnp.float32), jnp.float32(1.0),
+                           ring_est]),
+                axis_name)
+            wf, wq_pool = pooled[0], pooled[1]
+            all_exhausted = pooled[2] >= pooled[3]
+            ring_est = pooled[4]
+        p_hat = wq_pool / jnp.maximum(wf, 1.0)
         w_cap = w_caps[row]
         at_schedule = (wf >= s["target"]) | (wf >= w_cap)
         if not cfg.schedule_checks:      # static: check bounds every chunk
@@ -220,11 +272,12 @@ def estimate_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
         cond1 = sampling.stop_sampling(p_hat, wf, a, cfg.eps)
         cond2 = sampling.stop_probing(p_hat, wf, a, cfg.eps)
         ring_done = (at_schedule & (cond1 | cond2)) | (wf >= w_cap) | \
-            ((ci + 1) * chunk >= p_ring)
+            all_exhausted
         ptf = s["ptf"] | (at_schedule & cond2)
         target = jnp.where(at_schedule, s["target"] * 2.0, s["target"])
-        est = jnp.where(ring_done, s["est"] + totals_f[row] * p_hat, s["est"])
-        nvisited = jnp.where(ring_done, s["nvisited"] + w, s["nvisited"])
+        est = jnp.where(ring_done, s["est"] + ring_est, s["est"])
+        nvisited = jnp.where(ring_done, s["nvisited"] + wf.astype(jnp.int32),
+                             s["nvisited"])
         nk = jnp.where(ring_done, k + 1, k)
         nrow = jnp.minimum(nk - 1, n_rings - 1)
         return {
@@ -233,13 +286,13 @@ def estimate_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
             "wq": jnp.where(ring_done, 0.0, wq),
             "target": jnp.where(ring_done, first_targets[nrow], target),
             "est": est, "nvisited": nvisited, "ptf": ptf,
-            "done": (nk > n_rings) | ptf | (nvisited >= cfg.max_visit),
+            "done": (nk > n_rings) | ptf | (nvisited >= visit_budget),
         }
 
     init = {"k": jnp.int32(1), "ci": jnp.int32(0), "w": jnp.int32(0),
             "wq": jnp.float32(0.0), "target": first_targets[0],
             "est": est0, "nvisited": visited0, "ptf": jnp.bool_(False),
-            "done": jnp.bool_(n_rings < 1) | (visited0 >= cfg.max_visit)}
+            "done": jnp.bool_(n_rings < 1) | (visited0 >= visit_budget)}
     final = jax.lax.while_loop(cond, body, init)
     return final["est"], final["nvisited"]
 
@@ -343,12 +396,13 @@ def estimate(index: lsh.LSHIndex, x: jax.Array, q: jax.Array, tau: jax.Array,
     return jnp.mean(ests)
 
 
-@partial(jax.jit, static_argnames=("cfg",))
+@partial(jax.jit, static_argnames=("cfg", "axis_name"))
 def estimate_batch(index: lsh.LSHIndex, x: jax.Array, qs: jax.Array,
                    taus: jax.Array, cfg: ProberConfig, keys: jax.Array,
                    pq_codes: jax.Array | None = None,
                    pq_luts: jax.Array | None = None,
-                   pq_resid: jax.Array | None = None) -> jax.Array:
+                   pq_resid: jax.Array | None = None,
+                   axis_name=None) -> jax.Array:
     """Batched Alg. 1–3: estimate Q cardinalities in one jitted step.
 
     ``qs`` is (Q, d), ``taus`` (Q,), ``keys`` (Q, 2) — one PRNG key per query
@@ -358,6 +412,12 @@ def estimate_batch(index: lsh.LSHIndex, x: jax.Array, qs: jax.Array,
     ``while_loop`` are vmapped, so each query carries its own Chernoff
     stopping state while the scan work is shared across the batch
     (DESIGN.md §9). ``pq_luts`` is the pre-built (Q, M, Kc) LUT stack.
+
+    ``axis_name`` (sync mode, DESIGN.md §4): pool the Chernoff statistics
+    across the shards of that mesh axis — see :func:`estimate_one_table`.
+    The per-lane stopping flags are then shard-invariant, so the vmapped
+    while_loop runs the same iteration count on every shard and the in-loop
+    psum lines up.
     """
     qcodes = lsh.hash_point(index.params, qs, index.n_tables)   # (Q, L, K)
     views = table_views(index)
@@ -372,7 +432,8 @@ def estimate_batch(index: lsh.LSHIndex, x: jax.Array, qs: jax.Array,
         def per_table(view, qc, k):
             est, _ = estimate_one_table(view, qc, qualfn, cfg, k,
                                         central_qualfn=central_qualfn,
-                                        exact_qualfn=exact_qualfn)
+                                        exact_qualfn=exact_qualfn,
+                                        axis_name=axis_name)
             return est
 
         return jnp.mean(jax.vmap(per_table)(views, qcode, tkeys))

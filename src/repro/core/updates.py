@@ -67,11 +67,16 @@ def _write_rows(dst: jax.Array, src: jax.Array, start: jax.Array,
 # ------------------------------------------------------------- LSH (Alg. 7)
 
 def _lsh_ingest(index: lsh.LSHIndex, x_new: jax.Array, n_new: jax.Array,
-                cfg: ProberConfig) -> lsh.LSHIndex:
+                cfg: ProberConfig, axis_name=None) -> lsh.LSHIndex:
     """Fixed-shape Alg. 7 step: all output shapes equal the input capacity.
 
     Requires spare capacity for ``x_new.shape[0]`` rows (the wrapper grows
     first). jit-compiled once per (capacity, batch) shape pair.
+
+    ``axis_name`` (DESIGN.md §4): inside a shard_map over that mesh axis,
+    the W renormalisation pools its min/max across shards (one pmin/pmax
+    pair per ingest), so every shard derives the same global widths and
+    bucket codes stay globally consistent.
     """
     params = index.params
     nv = index.n_valid
@@ -79,7 +84,7 @@ def _lsh_ingest(index: lsh.LSHIndex, x_new: jax.Array, n_new: jax.Array,
     raw_all = _write_rows(index.raw, raw_new, nv, n_new)
     nv2 = nv + n_new
     # normalizeW over ALL live raw hash values (old + new)
-    w_new = lsh.normalize_w(raw_all, cfg.n_regions, nv2)
+    w_new = lsh.normalize_w(raw_all, cfg.n_regions, nv2, axis_name=axis_name)
     # offsets b are stored as a fraction of w (see lsh.project): rebase the
     # additive offset from b*w_old to b*w_new before re-quantising
     proj = raw_all - params.b * params.w              # pure x @ a
@@ -99,7 +104,7 @@ def _lsh_ingest(index: lsh.LSHIndex, x_new: jax.Array, n_new: jax.Array,
                         bucket_sizes=sizes, n_buckets=nb, n_valid=nv2)
 
 
-_lsh_ingest_jit = jax.jit(_lsh_ingest, static_argnames=("cfg",))
+_lsh_ingest_jit = jax.jit(_lsh_ingest, static_argnames=("cfg", "axis_name"))
 
 
 def _pad_batch(x_new: jax.Array) -> tuple[jax.Array, jax.Array]:

@@ -14,6 +14,7 @@ import dataclasses
 
 import jax
 
+from repro import compat
 from repro.launch.mesh import make_production_mesh  # noqa: F401  (re-export)
 
 
@@ -24,9 +25,7 @@ class MeshPlan:
     model: int
 
     def make(self):
-        return jax.make_mesh(
-            (self.data, self.model), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((self.data, self.model), ("data", "model"))
 
 
 def plan_remesh(n_alive: int, model_parallel: int) -> MeshPlan:

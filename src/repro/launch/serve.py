@@ -37,6 +37,14 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--max-calls", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--shards", type=int, default=0,
+                    help="shard the estimator corpus over this many devices "
+                         "(0 = single-device; needs that many jax devices, "
+                         "e.g. via XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N)")
+    ap.add_argument("--stopping", choices=["local", "sync"], default="local",
+                    help="distributed stopping mode (DESIGN.md §4); only "
+                         "meaningful with --shards > 1")
     args = ap.parse_args(argv)
 
     key = jax.random.PRNGKey(args.seed)
@@ -51,9 +59,23 @@ def main(argv=None):
     corpus = jax.random.normal(key, (args.corpus, args.emb_dim))
     pcfg = ProberConfig(n_tables=2, n_funcs=8, ring_budget=1024,
                         central_budget=1024, chunk=128)
+    mesh = None
+    if args.shards > 1:
+        from repro import compat
+        assert args.corpus % args.shards == 0, \
+            f"--shards {args.shards} must divide --corpus {args.corpus}"
+        assert len(jax.devices()) >= args.shards, \
+            f"--shards {args.shards} needs that many jax devices " \
+            f"(have {len(jax.devices())}; set XLA_FLAGS=" \
+            f"--xla_force_host_platform_device_count={args.shards})"
+        mesh = compat.make_mesh((args.shards,), ("data",),
+                                devices=jax.devices()[:args.shards])
     planner = SemanticPlanner(corpus, pcfg, key, max_calls=args.max_calls,
-                              slot_budget=args.slots)
-    print(f"serving {cfg.name} ({args.scale}) | corpus={args.corpus} docs")
+                              slot_budget=args.slots, mesh=mesh,
+                              mode=args.stopping)
+    where = f"{args.shards}-shard/{args.stopping}" if mesh else "1-device"
+    print(f"serving {cfg.name} ({args.scale}) | corpus={args.corpus} docs "
+          f"| estimator {where}")
 
     rng = np.random.default_rng(args.seed)
     served = refused = 0

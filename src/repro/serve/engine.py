@@ -47,10 +47,23 @@ class CardinalityCoalescer:
     ``jax.random.fold_in(key, i)``, making a request's estimate a pure
     function of (key, flush index, position in batch) — deterministic and
     replayable for audit.
+
+    With ``mesh`` (DESIGN.md §4) the coalescer serves off a SHARDED index
+    (the state ``distributed.build_sharded`` returns): flushes run the
+    distributed ``estimate_sharded`` with the chosen stopping ``mode``
+    (``"local"`` per-shard ε-stopping + psum, or ``"sync"`` pooled global
+    Chernoff statistics), and :meth:`ingest` routes new points through the
+    round-robin sharded recompile-free update step, tracking per-shard live
+    counts on the host so dispatch stays async.
     """
 
     def __init__(self, state: E.ProberState, cfg: ProberConfig,
-                 key: jax.Array, max_batch: int = 256):
+                 key: jax.Array, max_batch: int = 256,
+                 mesh=None, data_axes=("data",), mode: str = "local"):
+        assert mode in ("local", "sync"), mode
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.mode = mode
         self.state = state              # property: also syncs _n_valid
         self.cfg = cfg
         self.key = key
@@ -74,7 +87,9 @@ class CardinalityCoalescer:
         # the internal ingest loop bypasses this (tracking the count on the
         # host) so chunk dispatch never blocks on a device_get
         self._state = st
-        self._n_valid = int(jax.device_get(st.index.n_valid))
+        nv = jax.device_get(st.index.n_valid)
+        # sharded states carry one live count per shard
+        self._n_valid = np.asarray(nv) if self.mesh is not None else int(nv)
 
     def submit(self, q, tau) -> CardRequest:
         req = CardRequest(rid=self._next_rid, q=np.asarray(q),
@@ -116,6 +131,12 @@ class CardinalityCoalescer:
         buf = self._ingest_buf
         part, rest = buf[:k], buf[k:]
         self._ingest_buf = rest if len(rest) else None
+        if self.mesh is not None:
+            from repro.core import distributed as D
+            self._state, self._n_valid = D.update_sharded(
+                self._state, part, self.cfg, self.mesh,
+                data_axes=self.data_axes, n_valid=self._n_valid)
+            return
         self._state = E.update(self._state, jnp.asarray(part), self.cfg,
                                n_valid=self._n_valid)
         self._n_valid += len(part)
@@ -145,9 +166,16 @@ class CardinalityCoalescer:
                 qs[i], taus[i] = r.q, r.tau
             key = jax.random.fold_in(self.key, self._n_flushes)
             self._n_flushes += 1
-            ests = np.asarray(E.estimate_batch(
-                self.state, jnp.asarray(qs), jnp.asarray(taus),
-                self.cfg, key))
+            if self.mesh is not None:
+                from repro.core import distributed as D
+                ests = np.asarray(D.estimate_sharded(
+                    self.state, jnp.asarray(qs), jnp.asarray(taus),
+                    self.cfg, key, self.mesh, data_axes=self.data_axes,
+                    mode=self.mode))
+            else:
+                ests = np.asarray(E.estimate_batch(
+                    self.state, jnp.asarray(qs), jnp.asarray(taus),
+                    self.cfg, key))
             for i, r in enumerate(batch):
                 r.est = float(ests[i])
                 out[r.rid] = r.est

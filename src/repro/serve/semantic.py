@@ -38,16 +38,30 @@ class OperatorPlan:
 class SemanticPlanner:
     def __init__(self, corpus_embeddings, cfg: ProberConfig, key,
                  max_calls: int = 512, slot_budget: int = 8,
-                 max_batch: int = 256, capacity: int | None = None):
+                 max_batch: int = 256, capacity: int | None = None,
+                 mesh=None, data_axes=("data",), mode: str = "local"):
         self.cfg = cfg
         self.max_calls = max_calls
         self.slot_budget = slot_budget
+        self._mesh = mesh
         # capacity-padded build (DESIGN.md §10): leave spare rows so corpus
-        # updates are recompile-free jitted steps instead of rebuilds
-        self.state = E.build(corpus_embeddings, cfg, key, capacity=capacity)
+        # updates are recompile-free jitted steps instead of rebuilds. With
+        # ``mesh`` the index is SHARDED over its data axes (DESIGN.md §4)
+        # and estimates run distributed with the chosen stopping ``mode``.
+        if mesh is None:
+            self.state = E.build(corpus_embeddings, cfg, key,
+                                 capacity=capacity)
+        else:
+            from repro.core import distributed as D
+            self.state, _ = D.build_sharded(corpus_embeddings, cfg, key,
+                                            mesh, data_axes=data_axes,
+                                            capacity=capacity)
         self._key = key
         self._coalescer = CardinalityCoalescer(self.state, cfg, key,
-                                               max_batch=max_batch)
+                                               max_batch=max_batch,
+                                               mesh=mesh,
+                                               data_axes=data_axes,
+                                               mode=mode)
 
     def update_corpus(self, new_embeddings):
         """Dynamic data updates (paper §5) keep the planner fresh without a
@@ -59,6 +73,8 @@ class SemanticPlanner:
         self.state = self._coalescer.state
 
     def estimate(self, q, tau) -> float:
+        if self._mesh is not None:      # route through the sharded path
+            return self.estimate_batch([q], [tau])[0]
         self._key, sub = jax.random.split(self._key)
         return float(E.estimate(self.state, q, tau, self.cfg, sub))
 
