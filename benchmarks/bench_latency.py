@@ -7,8 +7,18 @@ competitive with sampling.
 ``--batch-sweep`` (or :func:`run_batch_sweep`) measures the batched path
 instead: queries/sec and per-query p50 latency of ``estimate_batch`` at
 Q ∈ {1, 8, 64, 256}, validating that coalescing amortises the hash matmul
-and candidate scan (DESIGN.md §9). Output rows:
-``{"dataset", "batch", "p50_ms_per_query", "qps", "speedup_vs_base"}``.
+and candidate scan (DESIGN.md §9). The sweep runs TWO workload mixes —
+``uniform`` (taus drawn uniformly from the dataset's radius grid, under
+the §9 throughput-truncated ``serve_cfg``) and ``skew`` (a heavy-tailed
+mix where ~1/8 of the requests carry a large tau and the rest a small
+one, under the ε-faithful adaptive stopping config — see
+:func:`adaptive_cfg`), the workload the compacting lane scheduler
+(DESIGN.md §11) targets: per-lane stopping makes lane costs diverge, and
+under the monolithic loop a batch pays for its slowest lane on every
+lane. Output rows:
+``{"dataset", "mix", "batch", "p50_ms_per_query", "qps",
+"speedup_vs_base"}``; ``__main__`` snapshots them to ``BENCH_latency.json``
+(benchmarks/README.md).
 """
 from __future__ import annotations
 
@@ -23,6 +33,7 @@ from benchmarks import common
 from repro.core import estimator as E
 
 BATCH_SIZES = (1, 8, 64, 256)
+SKEW_HEAVY_FRAC = 0.125     # fraction of large-tau requests in the skew mix
 
 
 def run(datasets=None):
@@ -46,61 +57,105 @@ def run(datasets=None):
     return rows
 
 
+def adaptive_cfg(cfg):
+    """ε-faithful stopping for the skewed sweep (DESIGN.md §11).
+
+    ``serve_cfg`` truncates EVERY lane at ``max_visit/chunk = 4`` slabs —
+    a throughput trade made for the monolithic scheduler (a batch pays for
+    its slowest lane, so the old loop capped the slowest lane) that also
+    flattens per-lane cost to ~4 slabs regardless of the workload,
+    suppressing the very skew a skew sweep must measure. The skew mix
+    therefore restores the paper's adaptive stopping (full default visit
+    budget, ring budget covering the ~2a/ε samples a PTF decision needs,
+    fine-grained chunks) on BOTH sides of any A/B: lane costs then span
+    ~13-55 slabs and the scheduler — not the truncation — decides the
+    wall-clock. All three fields predate the compacting scheduler, so the
+    same config drives older checkouts unchanged.
+    """
+    return cfg.replace(chunk=128, ring_budget=2048, max_visit=8192)
+
+
+def _sweep_requests(ds, pool: int, mix: str):
+    """(qs, taus) for one workload mix. ``uniform`` draws taus uniformly
+    from the per-query radius grid; ``skew`` gives a ``SKEW_HEAVY_FRAC``
+    minority the LARGEST grid radius (slow lanes: high selectivity needs
+    many Chernoff samples) and everyone else the smallest (fast lanes:
+    PTF after a slab or two) — shuffled so every batch holds the mix."""
+    rng = np.random.default_rng(0)
+    queries = np.asarray(ds.queries)
+    taus_all = np.asarray(ds.taus)
+    qi = rng.integers(0, queries.shape[0], pool)
+    if mix == "uniform":
+        ti = rng.integers(0, taus_all.shape[1], pool)
+        taus = taus_all[qi, ti]
+    else:
+        assert mix == "skew", mix
+        heavy = rng.permutation(pool) < max(int(pool * SKEW_HEAVY_FRAC), 1)
+        taus = np.where(heavy, taus_all[qi, -1], taus_all[qi, 0])
+    return jnp.asarray(queries[qi]), jnp.asarray(taus.astype(np.float32))
+
+
 def run_batch_sweep(batch_sizes=BATCH_SIZES, dataset: str = "sift",
-                    pool: int = 256, reps: int = 5):
-    """Throughput/latency of ``estimate_batch`` vs batch size Q.
+                    pool: int = 256, reps: int = 5,
+                    mixes=("uniform", "skew")):
+    """Throughput/latency of ``estimate_batch`` vs batch size Q, per mix.
 
     A fixed pool of ``pool`` (query, tau) requests is processed at every
     batch size — Q=1 is the per-request dispatch baseline, larger Q
     coalesces the same workload into pool/Q jitted steps — using the
     throughput-tuned :func:`common.serve_cfg`. Measurement rounds are
     INTERLEAVED across batch sizes so ambient load on a shared/throttled
-    host biases every Q equally. Reported per Q: p50 per-query latency
-    (median per-batch wall time / Q) and queries/sec (Q / p50 batch time).
+    host biases every Q equally. Reported per (mix, Q): p50 per-query
+    latency (median per-batch wall time / Q) and queries/sec (Q / MEAN
+    batch time — on the bimodal skew mix, small-Q batches are themselves
+    bimodal, so a median would report the fast-lane rate rather than
+    sustained throughput); ``speedup_vs_base`` is relative to that mix's
+    Q=1.
     """
     assert pool >= max(batch_sizes), \
         f"pool={pool} must cover the largest batch size {max(batch_sizes)}"
     ds = common.dataset(dataset)
-    cfg = common.serve_cfg(ds.x.shape[1])
-    st = E.build(ds.x, cfg, jax.random.PRNGKey(0))
+    base_cfg = common.serve_cfg(ds.x.shape[1])
+    # build is stopping-config independent, so both mixes share the state
+    st = E.build(ds.x, base_cfg, jax.random.PRNGKey(0))
     jax.block_until_ready(st.index.order)
-    rng = np.random.default_rng(0)
-    queries = np.asarray(ds.queries)
-    taus_all = np.asarray(ds.taus)
-    qi = rng.integers(0, queries.shape[0], pool)
-    ti = rng.integers(0, taus_all.shape[1], pool)
-    qs = jnp.asarray(queries[qi])
-    taus = jnp.asarray(taus_all[qi, ti])
-    for q in batch_sizes:                                # compile per shape
-        E.estimate_batch(st, qs[:q], taus[:q], cfg,
-                         jax.random.PRNGKey(0)).block_until_ready()
-    times: dict[int, list[float]] = {q: [] for q in batch_sizes}
-    for r in range(reps):
-        for q in batch_sizes:
-            for b in range(max(pool // q, 1)):
-                lo = b * q
-                t0 = time.perf_counter()
-                E.estimate_batch(st, qs[lo:lo + q], taus[lo:lo + q], cfg,
-                                 jax.random.PRNGKey(r * pool + b)
-                                 ).block_until_ready()
-                times[q].append(time.perf_counter() - t0)
     rows = []
-    base_q, base_qps = batch_sizes[0], None
-    for q in batch_sizes:
-        p50 = float(np.percentile(times[q], 50))
-        qps = q / p50
-        base_qps = qps if base_qps is None else base_qps
-        rows.append({"dataset": dataset, "batch": q,
-                     "p50_ms_per_query": 1e3 * p50 / q, "qps": qps,
-                     "speedup_vs_base": qps / base_qps})
-        print(f"[latency-batch] {dataset:9s} Q={q:4d} "
-              f"{1e3 * p50 / q:8.3f} ms/query p50  {qps:10.1f} q/s  "
-              f"({qps / base_qps:5.2f}x vs Q={base_q})")
+    for mix in mixes:
+        cfg = adaptive_cfg(base_cfg) if mix == "skew" else base_cfg
+        qs, taus = _sweep_requests(ds, pool, mix)
+        for q in batch_sizes:                            # compile per shape
+            E.estimate_batch(st, qs[:q], taus[:q], cfg,
+                             jax.random.PRNGKey(0)).block_until_ready()
+        times: dict[int, list[float]] = {q: [] for q in batch_sizes}
+        for r in range(reps):
+            for q in batch_sizes:
+                for b in range(max(pool // q, 1)):
+                    lo = b * q
+                    t0 = time.perf_counter()
+                    E.estimate_batch(st, qs[lo:lo + q], taus[lo:lo + q], cfg,
+                                     jax.random.PRNGKey(r * pool + b)
+                                     ).block_until_ready()
+                    times[q].append(time.perf_counter() - t0)
+        base_q, base_qps = batch_sizes[0], None
+        for q in batch_sizes:
+            p50 = float(np.percentile(times[q], 50))
+            qps = q / float(np.mean(times[q]))
+            base_qps = qps if base_qps is None else base_qps
+            rows.append({"dataset": dataset, "mix": mix, "batch": q,
+                         "p50_ms_per_query": 1e3 * p50 / q, "qps": qps,
+                         "speedup_vs_base": qps / base_qps})
+            print(f"[latency-batch] {dataset:9s} {mix:8s} Q={q:4d} "
+                  f"{1e3 * p50 / q:8.3f} ms/query p50  {qps:10.1f} q/s  "
+                  f"({qps / base_qps:5.2f}x vs Q={base_q})")
     return rows
 
 
 if __name__ == "__main__":
+    # distinct tags per sweep — the batch/skew rows are the longitudinal
+    # scheduling record and must not be clobbered by a methods-only run
     if "--batch-sweep" in sys.argv[1:]:
-        run_batch_sweep()
+        rows = run_batch_sweep()
+        common.write_bench_json("latency", rows, meta={"sweep": ["batch"]})
     else:
-        run()
+        rows = run()
+        common.write_bench_json("methods", rows, meta={"sweep": ["latency"]})

@@ -1,7 +1,12 @@
 """Shared benchmark helpers: datasets at CPU scale, method registry,
-Q-error statistics (paper §6.1)."""
+Q-error statistics (paper §6.1), and the machine-readable ``BENCH_*.json``
+trajectory snapshots (benchmarks/README.md)."""
 from __future__ import annotations
 
+import dataclasses
+import json
+import pathlib
+import platform
 import time
 
 import jax
@@ -42,7 +47,7 @@ def prober_cfg(use_pq: bool = False, d: int = 128, eps: float = 0.01
 
 
 def serve_cfg(d: int = 128) -> ProberConfig:
-    """Throughput-tuned serving configuration (DESIGN.md §9).
+    """Throughput-tuned serving configuration (DESIGN.md §9/§11).
 
     Single hash table, 12 hash functions, full-ADC qualification (central
     bucket included, so an estimate never touches the float corpus — only
@@ -51,12 +56,38 @@ def serve_cfg(d: int = 128) -> ProberConfig:
     on the sift surrogate) for ~4x lower single-query latency and a batched
     path that amortises: the bench_latency batch sweep measures >3x
     queries/sec at Q=64 vs Q=1 with this config on a 2-core CPU host.
+
+    The quantized uint8 ADC LUT (``pq_int8_lut``, DESIGN.md §11) is turned
+    on when the installed config supports it — guarded by field presence so
+    this harness can also drive OLDER checkouts of the repo for A/B
+    trajectory comparisons (the point of BENCH_*.json).
     """
     m = _pq_m(d)
-    return ProberConfig(n_tables=1, n_funcs=12, ring_budget=1024,
-                        central_budget=512, chunk=512, max_visit=2048,
-                        use_pq=True, pq_m=m, pq_kc=64, pq_iters=8,
-                        pq_exact_rings=0, pq_exact_central=False)
+    kw = dict(n_tables=1, n_funcs=12, ring_budget=1024,
+              central_budget=512, chunk=512, max_visit=2048,
+              use_pq=True, pq_m=m, pq_kc=64, pq_iters=8,
+              pq_exact_rings=0, pq_exact_central=False)
+    fields = {f.name for f in dataclasses.fields(ProberConfig)}
+    if "pq_int8_lut" in fields:
+        kw["pq_int8_lut"] = True
+    return ProberConfig(**kw)
+
+
+def write_bench_json(tag: str, rows: list, meta: dict | None = None):
+    """Snapshot benchmark ``rows`` to ``BENCH_<tag>.json`` at the repo root
+    — the machine-readable perf trajectory diffed across PRs
+    (benchmarks/README.md). Returns the path written."""
+    path = pathlib.Path(__file__).resolve().parent.parent / \
+        f"BENCH_{tag}.json"
+    payload = {"meta": {"date": time.strftime("%Y-%m-%d"),
+                        "backend": jax.default_backend(),
+                        "device_count": jax.device_count(),
+                        "platform": platform.platform(),
+                        **(meta or {})},
+               "rows": rows}
+    path.write_text(json.dumps(payload, indent=1) + "\n")
+    print(f"[bench] wrote {path}")
+    return path
 
 
 def qerror(est: float, true: float) -> float:

@@ -1,7 +1,9 @@
 """Benchmark driver — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (plus human-readable progress
-lines prefixed with [tag]).
+lines prefixed with [tag]) and snapshots the latency / q-error sections to
+machine-readable ``BENCH_latency.json`` / ``BENCH_qerror.json`` at the repo
+root — the perf trajectory diffed across PRs (benchmarks/README.md).
 
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run qerror adc  # a subset
@@ -15,22 +17,29 @@ def main() -> None:
     which = set(sys.argv[1:]) or {"qerror", "latency", "batch", "build",
                                   "adc", "epsilon", "updates", "roofline"}
     csv: list[tuple[str, float, str]] = []
+    method_rows: list[dict] = []
+    batch_rows: list[dict] = []
+    qerror_rows: list[dict] = []
 
     if "qerror" in which:
         from benchmarks import bench_qerror
         for r in bench_qerror.run():
+            qerror_rows.append(r)
             csv.append((f"qerror/{r['dataset']}/{r['method']}", 0.0,
                         f"meanQ={r['mean']:.3f};p90={r['p90']:.3f};"
                         f"p99={r['p99']:.3f};max={r['max']:.3f}"))
     if "latency" in which:
         from benchmarks import bench_latency
         for r in bench_latency.run():
+            method_rows.append(r)
             csv.append((f"latency/{r['dataset']}/{r['method']}",
                         1e3 * r["ms_per_query"], "online-estimate"))
     if "batch" in which:
         from benchmarks import bench_latency
         for r in bench_latency.run_batch_sweep():
-            csv.append((f"latency-batch/{r['dataset']}/Q{r['batch']}",
+            batch_rows.append(r)
+            csv.append((f"latency-batch/{r['dataset']}/"
+                        f"{r.get('mix', 'uniform')}/Q{r['batch']}",
                         1e3 * r["p50_ms_per_query"],
                         f"qps={r['qps']:.0f};"
                         f"speedup={r['speedup_vs_base']:.2f}x"))
@@ -79,6 +88,19 @@ def main() -> None:
                                     f"useful={r['useful_ratio']:.2f};"
                                     f"mfu_bound={r['mfu_bound']:.3f};"
                                     f"peak_gib={r['peak_gib']:.2f}"))
+
+    # distinct tags per sweep so a subset run never clobbers another sweep's
+    # committed record: BENCH_latency.json = the batch/skew scheduling sweep,
+    # BENCH_methods.json = per-method latency, BENCH_qerror.json = accuracy
+    from benchmarks import common
+    if method_rows:
+        common.write_bench_json("methods", method_rows,
+                                meta={"sweep": ["latency"]})
+    if batch_rows:
+        common.write_bench_json("latency", batch_rows,
+                                meta={"sweep": ["batch"]})
+    if qerror_rows:
+        common.write_bench_json("qerror", qerror_rows)
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:

@@ -32,6 +32,15 @@ class ProberConfig:
     pq_m: int = 8              # M subspaces
     pq_kc: int = 16            # Kc centroids per subspace
     pq_iters: int = 8          # Lloyd iterations at build
+    pq_int8_lut: bool = False  # quantized ADC datapath (DESIGN.md §11):
+                               # per-query affine uint8 LUT + int32 accumulate,
+                               # threshold compared in the quantized domain.
+                               # Qualification matches float32 ADC exactly
+                               # outside a ±(M/2+1)·scale band around tau^2.
+                               # Ignored when pq_banded (band needs floats).
+    pq_pack4: bool = False     # pack two 4-bit PQ codes per byte (requires
+                               # Kc <= 16 and even M) — halves code-matrix
+                               # bandwidth in the hot loop (DESIGN.md §11)
     pq_banded: bool = False    # residual-banded ADC qualification — measured
                                # WORSE than the hard threshold once near rings
                                # are exact (see EXPERIMENTS.md §Perf); kept as
@@ -44,6 +53,22 @@ class ProberConfig:
                                # the whole estimate then runs off the byte
                                # codes, never touching the float corpus — the
                                # high-throughput serving trade (DESIGN.md §9)
+    # --- skew-resilient probe scheduling (DESIGN.md §11) ---
+    lane_block: int = 4        # slab iterations run between lane compactions
+                               # of the batched prober; 0 = monolithic
+                               # while_loop (no compaction). Results are
+                               # bit-identical for every value.
+    lane_tile: int = 16        # lanes processed per compacted tile — work
+                               # granularity after compaction (static shape).
+                               # Batches with Q·L <= lane_tile lanes stay on
+                               # the monolithic loop (one tile can't retire
+                               # work early, so compacting it is overhead).
+                               # Tiles run SEQUENTIALLY, so size this toward
+                               # the backend's parallel width: 16 suits the
+                               # CPU host measured in DESIGN.md §11; on a
+                               # wide-parallel backend (GPU/TPU) raise it
+                               # (or set lane_block=0) so compaction never
+                               # trades free lane parallelism for depth
     # --- neighbor lookup (paper §4.7, Alg. 6) ---
     table_max_dist: int = 6    # M: distances above this are not stored
     # --- dynamic updates / serving ingest (paper §5, DESIGN.md §10) ---

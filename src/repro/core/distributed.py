@@ -11,12 +11,21 @@ Two stopping modes (``estimate_sharded(mode=...)``):
   * ``local`` (default) — each shard applies the ε-stopping to its own
     partition; zero mid-query communication. Guarantee: each shard's local
     selectivity is bounded within ε w.p. 1-δ, so the global absolute error is
-    bounded by ε·N w.p. (1-δ)^shards (union bound over shards).
+    bounded by ε·N w.p. (1-δ)^shards (union bound over shards). Each shard
+    runs the skew-resilient compacting scheduler (DESIGN.md §11) on its own
+    lanes — compaction decisions are purely shard-local, which is exactly
+    why this mode permits them.
   * ``sync``  — per sampling round the (w, w') statistics are pooled with a
     psum so the ε test sees global selectivity (one small collective per
     probed slab; see ``prober.estimate_one_table``). The stopping guarantee
     is ε/δ on the GLOBAL selectivity with no union bound, and pooled
-    samples reach each doubling anchor shards-times faster.
+    samples reach each doubling anchor shards-times faster. Sync mode keeps
+    the monolithic lockstep while_loop: the in-loop psum requires every
+    shard to execute the same slab sequence, so lane compaction — whose
+    reordering/trip-count decisions would have to be derived from pooled
+    values to stay lockstep — is documented local-mode-only (DESIGN.md
+    §11) and ``prober.estimate_batch`` routes ``axis_name`` calls to the
+    monolithic loop.
 
 Dynamic updates (DESIGN.md §10 extended to the sharded index): a
 capacity-padded ``build_sharded(..., capacity=...)`` leaves spare rows on

@@ -104,10 +104,11 @@ def build(x: jax.Array, cfg: ProberConfig, key: jax.Array,
 def estimate(state: ProberState, q: jax.Array, tau: jax.Array,
              cfg: ProberConfig, key: jax.Array) -> jax.Array:
     if cfg.use_pq and state.pq is not None:
-        lut = pqmod.adc_table(state.pq, q)
+        lut = pqmod.build_query_lut(state.pq, q, cfg)
         return prober.estimate(state.index, state.x, q, tau, cfg, key,
                                pq_codes=state.pq.codes, pq_lut=lut,
-                               pq_resid=state.pq.resid)
+                               pq_resid=state.pq.resid,
+                               pq_packed=state.pq.packed)
     return prober.estimate(state.index, state.x, q, tau, cfg, key)
 
 
@@ -117,10 +118,12 @@ def estimate_batch(state: ProberState, qs: jax.Array, taus: jax.Array,
     """Estimate Q cardinalities in one jitted step (see module docstring)."""
     keys = jax.random.split(key, qs.shape[0])
     if cfg.use_pq and state.pq is not None:
-        luts = jax.vmap(lambda q: pqmod.adc_table(state.pq, q))(qs)  # (Q,M,Kc)
+        # (Q, M, Kc) float LUT stack, or batched QuantLUT (DESIGN.md §11)
+        luts = jax.vmap(lambda q: pqmod.build_query_lut(state.pq, q, cfg))(qs)
         return prober.estimate_batch(state.index, state.x, qs, taus, cfg, keys,
                                      pq_codes=state.pq.codes, pq_luts=luts,
-                                     pq_resid=state.pq.resid)
+                                     pq_resid=state.pq.resid,
+                                     pq_packed=state.pq.packed)
     return prober.estimate_batch(state.index, state.x, qs, taus, cfg, keys)
 
 
@@ -139,10 +142,11 @@ def estimate_batch_pooled(state: ProberState, qs: jax.Array, taus: jax.Array,
     keys = jax.random.split(key, qs.shape[0])
     axis_name = axis_name if isinstance(axis_name, str) else tuple(axis_name)
     if cfg.use_pq and state.pq is not None:
-        luts = jax.vmap(lambda q: pqmod.adc_table(state.pq, q))(qs)
+        luts = jax.vmap(lambda q: pqmod.build_query_lut(state.pq, q, cfg))(qs)
         return prober.estimate_batch(state.index, state.x, qs, taus, cfg,
                                      keys, pq_codes=state.pq.codes,
                                      pq_luts=luts, pq_resid=state.pq.resid,
+                                     pq_packed=state.pq.packed,
                                      axis_name=axis_name)
     return prober.estimate_batch(state.index, state.x, qs, taus, cfg, keys,
                                  axis_name=axis_name)

@@ -12,7 +12,7 @@ K-means runs fully vectorised across subspaces; centroid updates use
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +29,11 @@ class PQIndex(NamedTuple):
                            # (beyond-paper: enables banded ADC qualification)
     n_valid: jax.Array     # () int32 — live points; rows >= n_valid of
                            # codes/resid are capacity padding (DESIGN.md §10)
+    packed: Optional[jax.Array] = None
+                           # (C, M//2) uint8 — two 4-bit codes per byte
+                           # (cfg.pq_pack4, Kc <= 16): halves code-matrix
+                           # bandwidth in the hot loop (DESIGN.md §11).
+                           # None unless built with pq_pack4.
 
     @property
     def m(self) -> int:
@@ -88,9 +93,15 @@ def fit(x: jax.Array, cfg: ProberConfig, key: jax.Array) -> PQIndex:
     counts = jax.ops.segment_sum(jnp.ones((n * m,), jnp.float32), seg,
                                  num_segments=m * kc).reshape(m, kc)
     resid = reconstruction_residual(centroids, codes, xs)
-    return PQIndex(centroids=centroids, codes=codes.astype(jnp.uint8),
+    codes8 = codes.astype(jnp.uint8)
+    packed = None
+    if cfg.pq_pack4:
+        assert kc <= 16 and m % 2 == 0, \
+            f"pq_pack4 needs Kc<=16 and even M, got Kc={kc}, M={m}"
+        packed = pack_codes(codes8)
+    return PQIndex(centroids=centroids, codes=codes8,
                    counts=counts, resid=resid,
-                   n_valid=jnp.asarray(n, jnp.int32))
+                   n_valid=jnp.asarray(n, jnp.int32), packed=packed)
 
 
 def grow(pq: PQIndex, new_capacity: int) -> PQIndex:
@@ -100,8 +111,30 @@ def grow(pq: PQIndex, new_capacity: int) -> PQIndex:
     cap = pq.codes.shape[0]
     assert new_capacity >= cap, (new_capacity, cap)
     pad = new_capacity - cap
+    packed = None if pq.packed is None else \
+        jnp.pad(pq.packed, ((0, pad), (0, 0)))
     return pq._replace(codes=jnp.pad(pq.codes, ((0, pad), (0, 0))),
-                       resid=jnp.pad(pq.resid, ((0, pad),)))
+                       resid=jnp.pad(pq.resid, ((0, pad),)),
+                       packed=packed)
+
+
+def pack_codes(codes: jax.Array) -> jax.Array:
+    """Pack 4-bit PQ codes pairwise: (..., M) uint8 → (..., M//2) uint8.
+
+    Byte j holds codes ``2j`` (low nibble) and ``2j+1`` (high nibble) —
+    the layout :func:`unpack_codes` and the packed qualfn gathers invert.
+    Requires Kc <= 16 (codes < 16) and even M.
+    """
+    c = codes.astype(jnp.uint8)
+    return (c[..., 0::2] | (c[..., 1::2] << 4)).astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_codes`: (..., M//2) uint8 → (..., M) int32."""
+    lo = (packed & 0xF).astype(jnp.int32)
+    hi = (packed >> 4).astype(jnp.int32)
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1],
+                                                2 * packed.shape[-1])
 
 
 def reconstruction_residual(centroids: jax.Array, codes: jax.Array,
@@ -117,6 +150,60 @@ def adc_table(pq: PQIndex, q: jax.Array) -> jax.Array:
     qs = q.reshape(pq.m, -1)                                 # (M, ds)
     diff = qs[:, None, :] - pq.centroids                     # (M, Kc, ds)
     return jnp.sum(diff ** 2, axis=-1)
+
+
+class QuantLUT(NamedTuple):
+    """Affine-quantized per-query ADC LUT (DESIGN.md §11).
+
+    Entry ``(m, c)`` of the float LUT is represented as
+    ``offset + scale * q8[m, c]`` with one scalar (scale, offset) per query,
+    so the whole table is uint8 — 4× less VMEM/cache than float32, and the
+    per-candidate accumulation is an int32 sum of M bytes. Round-to-nearest
+    bounds the per-entry error by ``scale/2`` and the summed ADC error by
+    ``M·scale/2``.
+    """
+    q8: jax.Array      # (M, Kc) uint8 (leading Q axis when batched)
+    scale: jax.Array   # () float32
+    offset: jax.Array  # () float32 — the LUT minimum
+
+
+def quantize_lut(lut: jax.Array) -> QuantLUT:
+    """Affine uint8 quantization of one (M, Kc) float LUT (Alg. 4 output).
+
+    ``scale = (max - min) / 255`` maps the LUT range onto [0, 255];
+    round-to-nearest keeps every dequantized entry within ``scale/2`` of
+    the float entry (no clipping error: entries lie inside [min, max]).
+    """
+    lo = jnp.min(lut)
+    scale = jnp.maximum((jnp.max(lut) - lo) / 255.0, 1e-20)
+    q8 = jnp.clip(jnp.round((lut - lo) / scale), 0.0, 255.0).astype(jnp.uint8)
+    return QuantLUT(q8=q8, scale=scale, offset=lo)
+
+
+def quantized_threshold(qlut: QuantLUT, m: int, tau_sq: jax.Array) -> jax.Array:
+    """Threshold for the quantized qualification test (DESIGN.md §11).
+
+    With ``S = Σ_m q8[m, code_m]`` (int32) the dequantized ADC distance is
+    ``M·offset + scale·S``, so ``dequant <= tau²  ⇔  S <= u`` with
+    ``u = (tau² - M·offset) / scale``. Since S is an integer, comparing
+    against ``floor(u)`` is EXACT with respect to the dequantized distances
+    — the only disagreement with float32 ADC comes from the ``±M·scale/2``
+    LUT rounding, so decisions match float32 exactly for every candidate
+    with ``|adc² - tau²| > (M/2 + 1)·scale`` (the +1 absorbs float rounding
+    of u itself; proven tight in tests/test_quantized.py).
+    """
+    u = (tau_sq - m * qlut.offset) / qlut.scale
+    return jnp.clip(jnp.floor(u), -1.0, 255.0 * m + 1.0).astype(jnp.int32)
+
+
+def build_query_lut(pq: PQIndex, q: jax.Array, cfg: ProberConfig):
+    """Per-query LUT in the datapath the config asks for: float32 (Alg. 4),
+    or the affine uint8 :class:`QuantLUT` when ``cfg.pq_int8_lut`` (banded
+    qualification needs float distances, so it keeps the float LUT)."""
+    lut = adc_table(pq, q)
+    if cfg.pq_int8_lut and not cfg.pq_banded:
+        return quantize_lut(lut)
+    return lut
 
 
 def adc_distance(lut: jax.Array, codes: jax.Array) -> jax.Array:

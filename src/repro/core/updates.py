@@ -163,6 +163,11 @@ def _pq_ingest(pq: pqmod.PQIndex, x_all: jax.Array, x_new: jax.Array,
         pq.centroids)
     codes = _write_rows(pq.codes, new_codes.astype(pq.codes.dtype),
                         pq.n_valid, n_new)
+    packed = pq.packed
+    if packed is not None:   # keep the 4-bit mirror in sync (DESIGN.md §11)
+        packed = _write_rows(packed,
+                             pqmod.pack_codes(new_codes.astype(jnp.uint8)),
+                             pq.n_valid, n_new)
     nv2 = pq.n_valid + n_new
     # refresh EVERY live residual against the moved centroids — old points
     # would otherwise keep residuals of the pre-update codebook
@@ -171,7 +176,7 @@ def _pq_ingest(pq: pqmod.PQIndex, x_all: jax.Array, x_new: jax.Array,
                                           codes.astype(jnp.int32), xs_all)
     resid = jnp.where(jnp.arange(cap) < nv2, resid, 0.0)
     return pqmod.PQIndex(centroids=new_centroids, codes=codes, counts=tot,
-                         resid=resid, n_valid=nv2)
+                         resid=resid, n_valid=nv2, packed=packed)
 
 
 _pq_ingest_jit = jax.jit(_pq_ingest)

@@ -21,6 +21,15 @@ the single-query kernel called in a loop. Consumed by the batched
 full-scan baseline (``core/baselines.adc_scan_estimate_batch``) — the
 non-adaptive counterpart of the prober, benchmarked in
 benchmarks/bench_adc.py.
+
+Quantized datapath (DESIGN.md §11): :func:`adc_q8` / :func:`adc_batch_q8`
+take the affine uint8 LUTs of ``pq.quantize_lut`` and return raw int32
+entry sums ``S[n] = Σ_m qlut[m, codes[n,m]]`` (dequantize as
+``offset·M + scale·S``, or compare against ``pq.quantized_threshold``
+without ever leaving the integer domain). The VMEM-resident LUT block is
+uint8 — 4× smaller than float32 — so 2-4× more queries' LUTs fit beside
+the code tiles; the contraction accumulates in int32
+(``preferred_element_type``), which is exact (max sum = M·255 « 2^31).
 """
 from __future__ import annotations
 
@@ -109,4 +118,94 @@ def adc_batch(codes: jax.Array, luts: jax.Array, *, bn: int = 512,
         out_shape=jax.ShapeDtypeStruct((q, cp.shape[0]), jnp.float32),
         interpret=interpret,
     )(cp, luts)
+    return out[:, :n]
+
+
+def _kernel_q8(codes_ref, lut_ref, out_ref):
+    codes = codes_ref[...]             # (bn, M) int32
+    lut = lut_ref[...]                 # (M, Kc) uint8 — 4x less VMEM
+    bn = codes.shape[0]
+    m, kc = lut.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, kc), 1)
+
+    def body(j, acc):
+        onehot = (codes[:, j][:, None] == iota).astype(jnp.int32)
+        return acc + jnp.dot(onehot, lut[j, :].astype(jnp.int32),
+                             preferred_element_type=jnp.int32)
+
+    acc = jax.lax.fori_loop(0, m, body, jnp.zeros((bn,), jnp.int32))
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def adc_q8(codes: jax.Array, qlut: jax.Array, *, bn: int = 512,
+           interpret: bool = True) -> jax.Array:
+    """codes (N, M) int, qlut (M, Kc) uint8 → int32 LUT-entry sums (N,).
+
+    Integer counterpart of :func:`adc` for the quantized ADC datapath
+    (DESIGN.md §11); the accumulation is exact in int32.
+    """
+    n, m = codes.shape
+    bn = min(bn, n)
+    pad_n = (-n) % bn
+    cp = jnp.pad(codes.astype(jnp.int32), ((0, pad_n), (0, 0)))
+    grid = (cp.shape[0] // bn,)
+    out = pl.pallas_call(
+        _kernel_q8,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec(qlut.shape, lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((cp.shape[0],), jnp.int32),
+        interpret=interpret,
+    )(cp, qlut)
+    return out[:n]
+
+
+def _batch_kernel_q8(codes_ref, luts_ref, out_ref):
+    codes = codes_ref[...]             # (bn, M) int32
+    luts = luts_ref[...]               # (Q, M, Kc) uint8 — 4x less VMEM
+    bn = codes.shape[0]
+    q, m, kc = luts.shape
+    iota = jax.lax.broadcasted_iota(jnp.int32, (bn, kc), 1)
+
+    def body(j, acc):
+        onehot = (codes[:, j][:, None] == iota).astype(jnp.int32)
+        return acc + jnp.dot(onehot, luts[:, j, :].astype(jnp.int32).T,
+                             preferred_element_type=jnp.int32)   # (bn, Q)
+
+    acc = jax.lax.fori_loop(0, m, body, jnp.zeros((bn, q), jnp.int32))
+    out_ref[...] = acc.T
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret"))
+def adc_batch_q8(codes: jax.Array, qluts: jax.Array, *, bn: int = 512,
+                 interpret: bool = True) -> jax.Array:
+    """codes (N, M) int32, qluts (Q, M, Kc) uint8 → int32 sums (Q, N).
+
+    Integer counterpart of :func:`adc_batch` (DESIGN.md §11): one pass over
+    the codes serves all Q queries with the LUT block resident in VMEM at a
+    quarter of the float32 footprint — e.g. Q=256 at M=32/Kc=256 costs
+    2 MiB instead of 8 MiB, so 2-4× more queries batch into one scan before
+    VMEM pressure forces a split.
+    """
+    n, m = codes.shape
+    q = qluts.shape[0]
+    bn = min(bn, n)
+    pad_n = (-n) % bn
+    cp = jnp.pad(codes.astype(jnp.int32), ((0, pad_n), (0, 0)))
+    grid = (cp.shape[0] // bn,)
+    out = pl.pallas_call(
+        _batch_kernel_q8,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec(qluts.shape, lambda i: (0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((q, bn), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, cp.shape[0]), jnp.int32),
+        interpret=interpret,
+    )(cp, qluts)
     return out[:, :n]

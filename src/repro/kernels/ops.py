@@ -37,6 +37,16 @@ def adc_batch(codes, luts, **kw):
     return _adc.adc_batch(codes, luts, **kw)
 
 
+def adc_q8(codes, qlut, **kw):
+    kw.setdefault("interpret", KERNEL_INTERPRET)
+    return _adc.adc_q8(codes, qlut, **kw)
+
+
+def adc_batch_q8(codes, qluts, **kw):
+    kw.setdefault("interpret", KERNEL_INTERPRET)
+    return _adc.adc_batch_q8(codes, qluts, **kw)
+
+
 def hamming(bucket_codes, qcode, **kw):
     kw.setdefault("interpret", KERNEL_INTERPRET)
     return _hamming.hamming(bucket_codes, qcode, **kw)

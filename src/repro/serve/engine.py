@@ -48,6 +48,14 @@ class CardinalityCoalescer:
     function of (key, flush index, position in batch) — deterministic and
     replayable for audit.
 
+    Flushes run under the skew-resilient compacting scheduler (DESIGN.md
+    §11, ``cfg.lane_block``; engages once a flush spans more than
+    ``cfg.lane_tile`` lanes): a coalesced batch mixes independent clients'
+    (q, tau) requests, so per-lane work is naturally skewed, and compaction
+    keeps one slow request from billing its slab work to every finished
+    lane in the flush. The compacting loop is shape-static, so it adds no
+    per-flush recompiles (tested in tests/test_compact.py).
+
     With ``mesh`` (DESIGN.md §4) the coalescer serves off a SHARDED index
     (the state ``distributed.build_sharded`` returns): flushes run the
     distributed ``estimate_sharded`` with the chosen stopping ``mode``

@@ -1,0 +1,147 @@
+"""Quantized ADC datapath (DESIGN.md §11).
+
+Covers: affine uint8 LUT round-trip error bound, quantized-vs-float
+qualification agreement (EXACT outside the ±(M/2+1)·scale rounding band
+around tau², never wildly off inside it), packed 4-bit code round-trip and
+gather equivalence, the int LUT kernels against their jnp reference, and
+end-to-end bitwise batch-vs-sequential equality on the quantized config.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import estimator as E, pq as pqmod, prober
+from repro.core.config import ProberConfig
+from repro.kernels import adc as adc_mod
+
+CFG = ProberConfig(n_tables=2, n_funcs=6, ring_budget=512,
+                   central_budget=512, chunk=128,
+                   use_pq=True, pq_m=8, pq_kc=16, pq_iters=4,
+                   pq_int8_lut=True)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return jax.random.normal(jax.random.PRNGKey(0), (2000, 32))
+
+
+@pytest.fixture(scope="module")
+def state(data):
+    return E.build(data, CFG, jax.random.PRNGKey(0))
+
+
+def test_quantize_lut_roundtrip(state):
+    lut = pqmod.adc_table(state.pq, jnp.zeros((32,)) + 0.3)
+    q = pqmod.quantize_lut(lut)
+    assert q.q8.dtype == jnp.uint8
+    deq = np.asarray(q.offset + q.scale * q.q8.astype(jnp.float32))
+    err = np.abs(deq - np.asarray(lut))
+    assert err.max() <= 0.5 * float(q.scale) * (1 + 1e-5), err.max()
+
+
+def test_q8_qualification_matches_float_outside_band(state, data):
+    """Decisions agree with float32 ADC for every candidate whose float ADC
+    distance is farther than (M/2 + 1)·scale from tau² — and the quantized
+    decision is EXACT w.r.t. the dequantized distances everywhere."""
+    pq = state.pq
+    m = pq.m
+    ids = jnp.arange(1500)
+    for qi in range(4):
+        q = data[qi] + 0.01
+        lut = pqmod.adc_table(pq, q)
+        qlut = pqmod.quantize_lut(lut)
+        adc_f = np.asarray(pqmod.adc_distance(lut, pq.codes[ids]
+                                              .astype(jnp.int32)))
+        # pick tau^2 at a mid quantile so both decisions occur
+        tau_sq = jnp.float32(np.quantile(adc_f, 0.4))
+        want = adc_f <= float(tau_sq)
+        fn = prober.make_adc_qualfn_q8(pq.codes, qlut, tau_sq)
+        got = np.asarray(fn(ids)) > 0.5
+        band = (m / 2 + 1) * float(qlut.scale)
+        away = np.abs(adc_f - float(tau_sq)) > band
+        assert away.sum() > 100        # the test actually exercises both sides
+        np.testing.assert_array_equal(got[away], want[away])
+        # disagreements with float must be confined to the band, and rare
+        assert np.all(np.abs(adc_f[got != want] - float(tau_sq)) <= band)
+        assert np.mean(got != want) < 0.05
+
+
+def test_pack4_roundtrip_and_qualfn_equivalence(state, data):
+    pq = state.pq
+    packed = pqmod.pack_codes(pq.codes)
+    assert packed.shape == (pq.codes.shape[0], pq.m // 2)
+    np.testing.assert_array_equal(np.asarray(pqmod.unpack_codes(packed)),
+                                  np.asarray(pq.codes.astype(jnp.int32)))
+    q = data[0] + 0.01
+    lut = pqmod.adc_table(pq, q)
+    qlut = pqmod.quantize_lut(lut)
+    tau_sq = jnp.float32(6.0)
+    ids = jnp.arange(777)
+    a = prober.make_adc_qualfn_q8(pq.codes, qlut, tau_sq)(ids)
+    b = prober.make_adc_qualfn_q8(pq.codes, qlut, tau_sq, packed=packed)(ids)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c = prober.make_adc_qualfn(pq.codes, lut, tau_sq)(ids)
+    d = prober.make_adc_qualfn(pq.codes, lut, tau_sq, packed=packed)(ids)
+    np.testing.assert_array_equal(np.asarray(c), np.asarray(d))
+
+
+def test_adc_q8_kernels_match_reference():
+    key = jax.random.PRNGKey(1)
+    n, m, kc, q = 777, 8, 32, 5       # n % bn != 0 exercises the padding
+    kc_, kl = jax.random.split(key)
+    codes = jax.random.randint(kc_, (n, m), 0, kc).astype(jnp.uint8)
+    qluts = jax.random.randint(kl, (q, m, kc), 0, 256).astype(jnp.uint8)
+    got = adc_mod.adc_batch_q8(codes, qluts, bn=256, interpret=True)
+    assert got.shape == (q, n) and got.dtype == jnp.int32
+    ref = jnp.stack([
+        jnp.sum(qluts[i][jnp.arange(m), codes.astype(jnp.int32)]
+                .astype(jnp.int32), axis=-1) for i in range(q)])
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    single = jnp.stack([adc_mod.adc_q8(codes, qluts[i], bn=256,
+                                       interpret=True) for i in range(q)])
+    np.testing.assert_array_equal(np.asarray(single), np.asarray(ref))
+
+
+def test_estimate_batch_bitwise_q8_pack4(data):
+    """Batch == sequential bit-for-bit on the full quantized+packed config
+    (both route through the same quantized qualfns and PRNG keys)."""
+    cfg = CFG.replace(pq_pack4=True)
+    st = E.build(data, cfg, jax.random.PRNGKey(0))
+    assert st.pq.packed is not None
+    qs, taus = data[:6] + 0.01, jnp.linspace(4.0, 9.0, 6)
+    key = jax.random.PRNGKey(7)
+    keys = jax.random.split(key, 6)
+    batch = E.estimate_batch(st, qs, taus, cfg, key)
+    seq = jnp.stack([E.estimate(st, qs[i], taus[i], cfg, keys[i])
+                     for i in range(6)])
+    np.testing.assert_array_equal(np.asarray(batch), np.asarray(seq))
+    assert np.asarray(batch).std() > 0
+
+
+def test_q8_accuracy_close_to_float(data):
+    """End-to-end: quantized-datapath estimates stay close to the float-ADC
+    estimates (same index, same keys) — the LUT rounding band only moves
+    candidates whose distance is within ~M·scale/2 of tau²."""
+    cfg_f = CFG.replace(pq_int8_lut=False)
+    st_f = E.build(data, cfg_f, jax.random.PRNGKey(0))
+    st_q = E.build(data, CFG, jax.random.PRNGKey(0))
+    qs, taus = data[:6] + 0.01, jnp.linspace(4.0, 9.0, 6)
+    key = jax.random.PRNGKey(7)
+    f = np.asarray(E.estimate_batch(st_f, qs, taus, cfg_f, key))
+    qv = np.asarray(E.estimate_batch(st_q, qs, taus, CFG, key))
+    ref = np.maximum(f, 10.0)
+    assert np.all(np.abs(qv - f) <= 0.25 * ref + 1e-6), (qv, f)
+
+
+def test_pq_ingest_maintains_packed(data):
+    """Dynamic updates (Alg. 8) keep the 4-bit mirror in sync with the byte
+    codes across in-capacity ingests."""
+    cfg = CFG.replace(pq_pack4=True)
+    st = E.build(data[:1024], cfg, jax.random.PRNGKey(0), capacity=2048)
+    st = E.update(st, data[1024:1280], cfg)
+    assert st.pq.packed is not None
+    nv = int(st.n_valid)
+    np.testing.assert_array_equal(
+        np.asarray(pqmod.unpack_codes(st.pq.packed[:nv])),
+        np.asarray(st.pq.codes[:nv].astype(jnp.int32)))

@@ -7,12 +7,11 @@ layout invariants, the jitted Alg. 9 neighbor-table step, the serve-layer
 ingest path, and regressions for the serving-engine slot-position and
 finished-request bugs.
 """
-import contextlib
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+from conftest import compile_events
 
 from repro.core import estimator as E, lsh, neighbors, updates
 from repro.core.config import ProberConfig
@@ -20,24 +19,6 @@ from repro.core.config import ProberConfig
 CFG = ProberConfig(n_tables=2, n_funcs=6, ring_budget=512,
                    central_budget=512, chunk=128)
 PQCFG = CFG.replace(use_pq=True, pq_m=4, pq_kc=16, pq_iters=4)
-
-
-@contextlib.contextmanager
-def compile_events():
-    """Collect jax compile-cache events — one per NEW XLA compilation;
-    cached executions add nothing."""
-    from jax._src import monitoring
-    events: list = []
-
-    def cb(event, **kw):
-        if "compile" in event:
-            events.append(event)
-
-    monitoring.register_event_listener(cb)
-    try:
-        yield events
-    finally:
-        monitoring._unregister_event_listener_by_callback(cb)
 
 
 @pytest.fixture(scope="module")
