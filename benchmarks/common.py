@@ -73,18 +73,35 @@ def serve_cfg(d: int = 128) -> ProberConfig:
     return ProberConfig(**kw)
 
 
-def write_bench_json(tag: str, rows: list, meta: dict | None = None):
+def write_bench_json(tag: str, rows: list, meta: dict | None = None,
+                     retain=None):
     """Snapshot benchmark ``rows`` to ``BENCH_<tag>.json`` at the repo root
     — the machine-readable perf trajectory diffed across PRs
-    (benchmarks/README.md). Returns the path written."""
+    (benchmarks/README.md). Returns the path written.
+
+    ``retain`` (predicate over existing rows): rows of the current file it
+    accepts are KEPT ahead of the new rows, and the old meta ``sweep`` list
+    is merged. Sweeps sharing one tag use this so a standalone run of one
+    sweep (e.g. ``bench_latency --workload``) never clobbers the other
+    sweep's committed record in the same file.
+    """
     path = pathlib.Path(__file__).resolve().parent.parent / \
         f"BENCH_{tag}.json"
+    meta = dict(meta or {})
+    kept: list = []
+    if retain is not None and path.exists():
+        old = json.loads(path.read_text())
+        kept = [r for r in old.get("rows", []) if retain(r)]
+        old_sweep = old.get("meta", {}).get("sweep", [])
+        if kept and old_sweep:
+            meta["sweep"] = sorted(set(old_sweep) | set(meta.get("sweep",
+                                                                 [])))
     payload = {"meta": {"date": time.strftime("%Y-%m-%d"),
                         "backend": jax.default_backend(),
                         "device_count": jax.device_count(),
                         "platform": platform.platform(),
-                        **(meta or {})},
-               "rows": rows}
+                        **meta},
+               "rows": kept + rows}
     path.write_text(json.dumps(payload, indent=1) + "\n")
     print(f"[bench] wrote {path}")
     return path

@@ -2,8 +2,13 @@
 
 Prints ``name,us_per_call,derived`` CSV rows (plus human-readable progress
 lines prefixed with [tag]) and snapshots the latency / q-error sections to
-machine-readable ``BENCH_latency.json`` / ``BENCH_qerror.json`` at the repo
-root — the perf trajectory diffed across PRs (benchmarks/README.md).
+machine-readable JSON at the repo root — the perf trajectory diffed across
+PRs (benchmarks/README.md). The committed record is three files:
+``BENCH_latency.json`` (the batch/skew scheduling sweep + the workload
+cache sweep), ``BENCH_methods.json`` (per-method latency) and
+``BENCH_qerror.json`` (accuracy). A selected section that fails to produce
+its documented snapshot is a hard error — the committed record must never
+silently go missing.
 
   PYTHONPATH=src python -m benchmarks.run             # everything
   PYTHONPATH=src python -m benchmarks.run qerror adc  # a subset
@@ -12,13 +17,19 @@ from __future__ import annotations
 
 import sys
 
+# section name -> the BENCH_<tag>.json snapshot it is documented to write
+SNAPSHOT_TAGS = {"latency": "methods", "batch": "latency",
+                 "workload": "latency", "qerror": "qerror"}
+
 
 def main() -> None:
-    which = set(sys.argv[1:]) or {"qerror", "latency", "batch", "build",
-                                  "adc", "epsilon", "updates", "roofline"}
+    which = set(sys.argv[1:]) or {"qerror", "latency", "batch", "workload",
+                                  "build", "adc", "epsilon", "updates",
+                                  "roofline"}
     csv: list[tuple[str, float, str]] = []
     method_rows: list[dict] = []
     batch_rows: list[dict] = []
+    workload_rows: list[dict] = []
     qerror_rows: list[dict] = []
 
     if "qerror" in which:
@@ -43,6 +54,16 @@ def main() -> None:
                         1e3 * r["p50_ms_per_query"],
                         f"qps={r['qps']:.0f};"
                         f"speedup={r['speedup_vs_base']:.2f}x"))
+    if "workload" in which:
+        from benchmarks import bench_latency
+        for r in bench_latency.run_workload_sweep():
+            workload_rows.append(r)
+            extra = f";speedup={r['speedup_vs_fresh']:.2f}x" \
+                if "speedup_vs_fresh" in r else ""
+            csv.append((f"workload/{r['dataset']}/{r['workload']}/"
+                        f"{r['side']}", 0.0,
+                        f"qps={r['qps']:.0f};hit={r['hit_rate']:.2f}"
+                        + extra))
     if "build" in which:
         from benchmarks import bench_build
         for r in bench_build.run():
@@ -90,17 +111,43 @@ def main() -> None:
                                     f"peak_gib={r['peak_gib']:.2f}"))
 
     # distinct tags per sweep so a subset run never clobbers another sweep's
-    # committed record: BENCH_latency.json = the batch/skew scheduling sweep,
-    # BENCH_methods.json = per-method latency, BENCH_qerror.json = accuracy
+    # committed record: BENCH_latency.json = the batch/skew scheduling sweep
+    # + the workload cache sweep (merged rows; workload rows carry a
+    # "workload" key), BENCH_methods.json = per-method latency,
+    # BENCH_qerror.json = accuracy
     from benchmarks import common
+    written: set[str] = set()
     if method_rows:
         common.write_bench_json("methods", method_rows,
                                 meta={"sweep": ["latency"]})
-    if batch_rows:
-        common.write_bench_json("latency", batch_rows,
-                                meta={"sweep": ["batch"]})
+        written.add("methods")
+    latency_meta = {"sweep": [s for s, rs in
+                              (("batch", batch_rows),
+                               ("workload", workload_rows)) if rs]}
+    if batch_rows and workload_rows:
+        common.write_bench_json("latency", batch_rows + workload_rows,
+                                meta=latency_meta)
+    elif batch_rows:
+        common.write_bench_json("latency", batch_rows, meta=latency_meta,
+                                retain=lambda r: "workload" in r)
+    elif workload_rows:
+        common.write_bench_json("latency", workload_rows, meta=latency_meta,
+                                retain=lambda r: "workload" not in r)
+    if batch_rows or workload_rows:
+        written.add("latency")
     if qerror_rows:
         common.write_bench_json("qerror", qerror_rows)
+        written.add("qerror")
+
+    # fail LOUDLY if a selected section did not produce its documented
+    # snapshot — a silently missing BENCH_*.json breaks the cross-PR
+    # trajectory record this driver exists to maintain
+    missing = {f"{sec} -> BENCH_{tag}.json"
+               for sec, tag in SNAPSHOT_TAGS.items()
+               if sec in which and tag not in written}
+    if missing:
+        raise SystemExit("documented benchmark snapshots were not written: "
+                         + ", ".join(sorted(missing)))
 
     print("\nname,us_per_call,derived")
     for name, us, derived in csv:

@@ -1,0 +1,158 @@
+"""Serving workload generator (DESIGN.md §12) — repeat-heavy request
+streams for the estimate-cache benchmarks and any future serving sweep.
+
+Real estimation traffic from many concurrent clients is not i.i.d.: a few
+(query, tau) pairs dominate (zipfian repeats, the qwLSH observation), the
+popular set drifts over time, each client sticks to a narrow tau band, and
+queries interleave with corpus ingest. Each scenario here produces a
+seeded, fully deterministic event stream over a pool of (query, tau)
+requests drawn from the dataset's paper-protocol workload grid (so exact
+cardinalities are known and q-error is measurable):
+
+* ``zipf``     — stationary zipfian repeats over a shuffled pool
+                 (``skew ~ 0.99``): the pure reuse regime the cache's
+                 2x queries/sec acceptance gate is measured on.
+* ``drift``    — the zipfian pool slides a window over the pool every
+                 ``phase_len`` events: popularity is non-stationary, so a
+                 cache must evict yesterday's heads (exercises CLOCK).
+* ``tau-corr`` — each distinct query draws from its OWN small band of
+                 adjacent grid taus (clients have characteristic
+                 selectivities): hit rate then depends on tau banding, the
+                 ``reuse_tol`` trade.
+* ``mixed``    — zipfian queries interleaved with corpus ingest batches
+                 every ``ingest_every`` queries: exercises epoch
+                 invalidation under live updates (and is the zero-stale
+                 correctness stream in tests/test_cache.py).
+
+Events are ``("q", pool_index)`` / ``("ingest", (P_i, d) array)`` tuples;
+:func:`Workload.request` resolves a pool index to its (q, tau, truth).
+Everything derives from ``numpy.random.default_rng(seed)`` — the same
+(scenario, seed, sizes) always yields the same stream, which is what makes
+paired A/B comparisons (cached vs fresh serving on the SAME stream) fair.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+SCENARIOS = ("zipf", "drift", "tau-corr", "mixed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Workload:
+    """One generated request stream. ``truth`` holds exact cardinalities at
+    GENERATION time — valid for q-error only while no ingest event has been
+    applied (the ``mixed`` scenario measures hit rate / staleness, not
+    q-error)."""
+    name: str
+    events: tuple            # (("q", pool_idx) | ("ingest", np.ndarray), ...)
+    qs: np.ndarray           # (P, d) pool queries
+    taus: np.ndarray         # (P,) pool radii
+    truth: np.ndarray        # (P,) exact |{p : ||p - q|| <= tau}|
+
+    def request(self, pool_idx: int):
+        return self.qs[pool_idx], float(self.taus[pool_idx]), \
+            float(self.truth[pool_idx])
+
+    @property
+    def n_queries(self) -> int:
+        return sum(1 for kind, _ in self.events if kind == "q")
+
+
+def _zipf_probs(pool: int, skew: float) -> np.ndarray:
+    p = 1.0 / np.arange(1, pool + 1, dtype=np.float64) ** skew
+    return p / p.sum()
+
+
+def _request_pool(ds, pool: int, rng) -> tuple[np.ndarray, ...]:
+    """Sample ``pool`` distinct (query, tau) pairs from the dataset's
+    paper-protocol grid (vectors.paper_query_workload), rank-shuffled so
+    zipf popularity is independent of grid position."""
+    queries = np.asarray(ds.queries)
+    taus = np.asarray(ds.taus)
+    cards = np.asarray(ds.cards)
+    nq, nt = taus.shape
+    pairs = rng.permutation(nq * nt)[:pool]
+    qi, ti = pairs // nt, pairs % nt
+    return (queries[qi].astype(np.float32), taus[qi, ti].astype(np.float32),
+            cards[qi, ti].astype(np.float32), qi)
+
+
+def _ingest_batch(ds, rng, n: int, noise: float = 0.05) -> np.ndarray:
+    """New corpus points near existing ones (in-distribution growth — the
+    paper's §5 scenario): anchor on random live points + small noise."""
+    x = np.asarray(ds.x)
+    anchors = x[rng.integers(0, x.shape[0], n)]
+    return (anchors + noise * rng.standard_normal(anchors.shape)
+            ).astype(np.float32)
+
+
+def generate(ds, scenario: str, n_events: int = 1024, pool: int = 64,
+             skew: float = 0.99, seed: int = 0, phase_len: int = 256,
+             drift_window: int | None = None, tau_band: int = 2,
+             ingest_every: int = 128, ingest_n: int = 32) -> Workload:
+    """Build one scenario's event stream (module docstring has the zoo).
+
+    ``pool`` bounds the distinct (query, tau) pairs in play; ``skew`` is
+    the zipf exponent (1.0 > skew > 0: heavier head for larger skew);
+    ``phase_len``/``drift_window`` shape the ``drift`` scenario's
+    popularity churn; ``tau_band`` is how many adjacent grid radii a
+    ``tau-corr`` client wanders over; ``ingest_every``/``ingest_n`` pace
+    the ``mixed`` scenario's update stream.
+    """
+    assert scenario in SCENARIOS, (scenario, SCENARIOS)
+    rng = np.random.default_rng(seed)
+    qs, taus, truth, qi = _request_pool(ds, pool, rng)
+    pool = qs.shape[0]                      # may clip to the grid size
+
+    if scenario == "tau-corr":
+        # re-pool over DISTINCT queries: each client query owns one band of
+        # `tau_band` ADJACENT grid radii; the stream zipfs over queries and
+        # picks uniformly inside the query's own band
+        taus_all = np.asarray(ds.taus)
+        cards_all = np.asarray(ds.cards)
+        queries = np.asarray(ds.queries)
+        nq, nt = taus_all.shape
+        pool_q = min(pool, nq)
+        sel = rng.permutation(nq)[:pool_q]
+        base = rng.integers(0, nt - tau_band + 1, pool_q)
+        ids, new_taus, new_truth = [], [], []
+        for i in range(pool_q):
+            for b in range(tau_band):
+                ids.append(sel[i])
+                new_taus.append(taus_all[sel[i], base[i] + b])
+                new_truth.append(cards_all[sel[i], base[i] + b])
+        qs = queries[np.asarray(ids)].astype(np.float32)
+        taus = np.asarray(new_taus, np.float32)
+        truth = np.asarray(new_truth, np.float32)
+        probs = _zipf_probs(pool_q, skew)
+        heads = rng.choice(pool_q, size=n_events, p=probs)
+        bands = rng.integers(0, tau_band, n_events)
+        events = tuple(("q", int(h * tau_band + b))
+                       for h, b in zip(heads, bands))
+        return Workload("tau-corr", events, qs, taus, truth)
+
+    if scenario == "drift":
+        window = drift_window or max(pool // 4, 8)
+        probs = _zipf_probs(window, skew)
+        events = []
+        for t in range(n_events):
+            start = (t // phase_len) * max(window // 2, 1)
+            events.append(("q", int((start + rng.choice(window, p=probs))
+                               % pool)))
+        return Workload("drift", tuple(events), qs, taus, truth)
+
+    probs = _zipf_probs(pool, skew)
+    picks = rng.choice(pool, size=n_events, p=probs)
+    if scenario == "zipf":
+        return Workload("zipf", tuple(("q", int(i)) for i in picks),
+                        qs, taus, truth)
+
+    # mixed: zipf queries + an ingest batch every `ingest_every` queries
+    events: list = []
+    for t, i in enumerate(picks):
+        if t and t % ingest_every == 0:
+            events.append(("ingest", _ingest_batch(ds, rng, ingest_n)))
+        events.append(("q", int(i)))
+    return Workload("mixed", tuple(events), qs, taus, truth)

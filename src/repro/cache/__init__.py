@@ -1,0 +1,30 @@
+"""Workload-aware estimate cache (DESIGN.md §12).
+
+LSH-keyed reuse for the serving path: repeated / near-duplicate ``(q, tau)``
+requests skip the probe → progressive-sampling → ADC pipeline entirely and
+are served out of a fixed-capacity pure-array cache, kept correct under
+dynamic ingest (paper §5) by per-bucket ingest-epoch counters.
+
+* :mod:`repro.cache.epochs` — the invalidation signal: per
+  (table, function, hashed code value) ingest counters bumped inside the
+  recompile-free update step (DESIGN.md §10), snapshotted per cache entry,
+  re-checked in O(rings) at lookup.
+* :mod:`repro.cache.estimate_cache` — the jit-friendly store: key table of
+  per-table LSH bucket signatures + quantized tau band, value table of
+  estimates + sample stats, CLOCK/second-chance eviction. No Python dicts
+  on the hot path.
+
+Served through :class:`repro.serve.engine.CardinalityCoalescer`
+(``cache_size=``/``reuse_tol=``) and
+:class:`repro.serve.semantic.SemanticPlanner`.
+"""
+from repro.cache.epochs import (EpochState, ball_sums, ingest_bump,
+                                init_epochs)
+from repro.cache.estimate_cache import (EstimateCache, init_cache, insert,
+                                        lookup, query_hash, tau_band)
+
+__all__ = [
+    "EpochState", "init_epochs", "ingest_bump", "ball_sums",
+    "EstimateCache", "init_cache", "lookup", "insert", "query_hash",
+    "tau_band",
+]

@@ -1,0 +1,91 @@
+"""Per-bucket ingest epochs — the cache invalidation layer (DESIGN.md §12).
+
+The serving cache (estimate_cache.py) may only serve a stored estimate if
+every bucket the original probe visited is untouched by every ingest since.
+The probed buckets of a query are exactly the buckets within Hamming
+distance ``probed_k`` of its code (rings 0..probed_k, DESIGN.md §3), and
+the capacity-padded layout (DESIGN.md §10) already maintains the perfect
+per-bucket epoch for free: **its population**. Points are only ever added
+(the paper's §5 stream has no deletes), codes of live points are
+bit-stable while W is (lsh.project_raw), and a bucket's Hamming distance
+to a fixed query code never changes — so the sum of ``bucket_sizes`` over
+a query's probed ball is monotone non-decreasing, and it moved **iff**
+some ingest landed a point inside a probed ring (including ingests that
+CREATE a new bucket there: the new bucket enters the ball carrying its
+population). No hashed counters, no collisions, no false hits and no
+false invalidations — the check is exact.
+
+What still needs explicit state is the GENERATION of the hash functions:
+Alg. 7's W renormalisation can move the widths (a new point extended a
+projection extreme), after which every live point's code may shift and
+every entry's snapshot geometry is void. ``EpochState.params_epoch``
+counts those generations; the fixed-shape ingest step bumps it only when
+``W`` actually changed — which, with offset-free retained projections
+(``lsh.project_raw``), is bitwise-exactly "some extreme moved", not
+"every update" (ulp drift used to flush the cache on each ingest).
+
+The freshness check at lookup is one (B, K) Hamming compare + masked sum
+per (query, table) — the probe's own ring construction, minus everything
+after it — and the serving layer elides it statically until the first
+ingest actually happens. Stale entries are never swept: they die lazily
+when the check fails, and the re-probe overwrites them in place.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EpochState(NamedTuple):
+    """Ingest bookkeeping carried in the ProberState (both uint32)."""
+    params_epoch: jax.Array  # () hash-function generation (W renorm bumps)
+    n_ingested: jax.Array    # () total points ingested (diagnostics)
+
+
+def init_epochs() -> EpochState:
+    """Fresh counters — the population-based design needs no per-table
+    state (module docstring)."""
+    return EpochState(params_epoch=jnp.uint32(0), n_ingested=jnp.uint32(0))
+
+
+def ingest_bump(ep: EpochState, n_new: jax.Array,
+                w_changed: jax.Array) -> EpochState:
+    """Fold one ingest batch into the bookkeeping (fixed-shape; jit-safe
+    inside the recompile-free update step, DESIGN.md §10). ``w_changed``
+    flags an Alg. 7 renormalisation that moved a width — the whole cache
+    generation is then retired via ``params_epoch``."""
+    return EpochState(
+        params_epoch=ep.params_epoch + w_changed.astype(jnp.uint32),
+        n_ingested=ep.n_ingested + n_new.astype(jnp.uint32))
+
+
+def ball_sums(bucket_codes: jax.Array, bucket_sizes: jax.Array,
+              n_buckets: jax.Array, qcodes: jax.Array,
+              probed_k: jax.Array) -> jax.Array:
+    """Per-table probed-ball populations — the exact invalidation signal.
+
+    ``bucket_codes`` (L, B, K) / ``bucket_sizes`` (L, B) / ``n_buckets``
+    (L,) are the index's bucket layout; ``qcodes`` (..., L, K) the query
+    codes; ``probed_k`` (..., L) the deepest ring each probe folded.
+    Returns (..., L) int32 — the number of live points in buckets within
+    distance ``probed_k`` of the query code (rings 0..probed_k). Capacity-
+    padding sentinel rows sit past ``n_buckets`` and are masked.
+    """
+    nt, nb_ax, _ = bucket_codes.shape
+    row_live = jnp.arange(nb_ax)[None, :] < n_buckets[:, None]  # (L, B)
+
+    def per_table(bc, live, sizes, qc, pk):
+        dist = jnp.sum(bc != qc[None, :], axis=-1)              # (B,)
+        return jnp.sum(jnp.where(live & (dist <= pk), sizes, 0))
+
+    def one(qc, pk):                                            # (L, K)/(L,)
+        return jax.vmap(per_table)(bucket_codes, row_live, bucket_sizes,
+                                   qc, pk)
+
+    batch = qcodes.shape[:-2]
+    flat_q = qcodes.reshape((-1,) + qcodes.shape[-2:])
+    flat_k = probed_k.reshape((-1, probed_k.shape[-1]))
+    out = jax.vmap(one)(flat_q, flat_k)
+    return out.reshape(batch + (nt,)).astype(jnp.int32)

@@ -1,0 +1,231 @@
+"""Fixed-capacity estimate cache — pure-array storage, CLOCK eviction
+(DESIGN.md §12).
+
+The cache is a NamedTuple of fixed-shape arrays (jit/donate friendly, no
+Python dicts on the hot path): a KEY table of per-table LSH bucket
+signatures (the query's (L, K) bucket codes — computed for free by the
+index), an exact-query fingerprint, and a quantized tau band; a VALUE
+table of estimates + sample stats; per-entry epoch snapshots
+(:mod:`repro.cache.epochs`) for the ingest-invalidation check; and
+CLOCK/second-chance metadata (a ``ref`` bit per entry, one clock hand).
+
+Key semantics (the ``reuse_tol`` knob):
+
+* ``reuse_tol == 0`` — fully strict: a hit requires the identical query
+  vector (two independent 32-bit fingerprints of the raw float bytes plus
+  the full (L, K) code compare) and bit-identical tau. Hits are then
+  bit-identical to the estimate the original probe produced, so serving
+  them adds zero q-error.
+* ``reuse_tol > 0`` — LSH-keyed reuse: a hit requires the same bucket code
+  in EVERY table (near-duplicate queries by LSH geometry) and a tau in the
+  same multiplicative band (``floor(ln tau / ln(1 + reuse_tol))``), so a
+  served estimate belongs to a query hashing identically under all L·K
+  functions and a tau within a factor ``(1 + reuse_tol)`` — the knob
+  trades hit rate against a bounded extra q-error (cardinality is
+  monotone in tau, and full-code LSH collision bounds the query
+  displacement relative to the bucket widths W).
+
+Lookup is one vectorised compare over the entry axis; insertion is a
+sequential ``fori_loop`` over the batch (entries written by earlier lanes
+must be visible to later ones — duplicate keys in one flush overwrite in
+place instead of double-filling). Eviction is textbook second-chance: the
+hand sweeps from its last position, clearing ``ref`` on entries it passes,
+and evicts the first entry whose ``ref`` is already clear.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.cache.epochs import EpochState, ball_sums
+
+_MULT = jnp.uint32(2654435761)
+
+
+class EstimateCache(NamedTuple):
+    # --- key table ---
+    qcodes: jax.Array      # (S, L, K) int32 per-table bucket signatures
+    qhash: jax.Array       # (S, 2) uint32 exact-query fingerprint
+    tau_key: jax.Array     # (S,) int32 quantized tau band / exact tau bits
+    # --- epoch snapshots (invalidation) ---
+    snap_ball: jax.Array   # (S, L) int32 probed-ball populations
+    snap_params: jax.Array # (S,) uint32
+    probed_k: jax.Array    # (S, L) int32 — deepest ring the probe folded
+    # --- value table ---
+    est: jax.Array         # (S,) float32
+    nvisited: jax.Array    # (S,) int32 sample count of the original probe
+    # --- CLOCK ---
+    valid: jax.Array       # (S,) bool
+    ref: jax.Array         # (S,) bool second-chance bit
+    hand: jax.Array        # () int32
+
+    @property
+    def size(self) -> int:
+        return self.est.shape[0]
+
+
+def init_cache(size: int, n_tables: int, n_funcs: int) -> EstimateCache:
+    s = int(size)
+    assert s > 0, size
+    return EstimateCache(
+        qcodes=jnp.zeros((s, n_tables, n_funcs), jnp.int32),
+        qhash=jnp.zeros((s, 2), jnp.uint32),
+        tau_key=jnp.zeros((s,), jnp.int32),
+        snap_ball=jnp.zeros((s, n_tables), jnp.int32),
+        snap_params=jnp.zeros((s,), jnp.uint32),
+        probed_k=jnp.zeros((s, n_tables), jnp.int32),
+        est=jnp.zeros((s,), jnp.float32),
+        nvisited=jnp.zeros((s,), jnp.int32),
+        valid=jnp.zeros((s,), bool),
+        ref=jnp.zeros((s,), bool),
+        hand=jnp.int32(0))
+
+
+def tau_band(taus: jax.Array, reuse_tol: float) -> jax.Array:
+    """Quantize taus into the cache's tau key. ``reuse_tol`` is static:
+    0 keys on the exact float32 bits; > 0 on multiplicative log-bands of
+    width ``(1 + reuse_tol)`` (see module docstring)."""
+    taus = jnp.asarray(taus, jnp.float32)
+    if reuse_tol <= 0.0:
+        return jax.lax.bitcast_convert_type(taus, jnp.int32)
+    inv = 1.0 / math.log1p(reuse_tol)
+    return jnp.floor(jnp.log(jnp.maximum(taus, 1e-30)) * inv).astype(jnp.int32)
+
+
+def query_hash(qs: jax.Array) -> jax.Array:
+    """Two independent 32-bit fingerprints of the raw query bytes
+    (..., d) -> (..., 2). Used only at ``reuse_tol == 0`` where a hit must
+    be an exact repeat."""
+    b = jax.lax.bitcast_convert_type(jnp.asarray(qs, jnp.float32),
+                                     jnp.uint32)
+    i = jnp.arange(b.shape[-1], dtype=jnp.uint32)
+    h1 = jnp.sum(b * (2 * i + 1), axis=-1)
+    h2 = jnp.sum((b ^ (b >> 16)) * (_MULT + 2 * i + 1), axis=-1)
+
+    def mix(x):
+        x = (x ^ (x >> 15)) * jnp.uint32(0x85EBCA6B)
+        return x ^ (x >> 13)
+
+    return jnp.stack([mix(h1), mix(h2)], axis=-1)
+
+
+def _key_match(cache: EstimateCache, qc: jax.Array, qh: jax.Array,
+               tk: jax.Array, match_qhash: bool) -> jax.Array:
+    """(S,) bool — valid entries whose key equals one request's key."""
+    m = cache.valid & (cache.tau_key == tk) & \
+        jnp.all(cache.qcodes == qc[None], axis=(-2, -1))
+    if match_qhash:
+        m = m & jnp.all(cache.qhash == qh[None], axis=-1)
+    return m
+
+
+@partial(jax.jit, static_argnames=("match_qhash", "check_ingest"))
+def lookup(cache: EstimateCache, ep: EpochState, bucket_codes: jax.Array,
+           bucket_sizes: jax.Array, n_buckets: jax.Array,
+           qcodes: jax.Array, qhash: jax.Array,
+           tau_keys: jax.Array, live: jax.Array,
+           match_qhash: bool = True, check_ingest: bool = True):
+    """Batched lookup: (B, L, K) codes + (B, 2) fingerprints + (B,) tau
+    keys -> ``(cache', est (B,), hit (B,), stale (B,))``.
+
+    ``hit`` = key present AND the entry's epoch snapshot still matches —
+    the params generation, and (``check_ingest``) the probed-ball
+    population recomputed over the CURRENT bucket layout (epochs.py — the
+    check is exact: populations are monotone and move iff an ingest landed
+    in a probed ring). ``stale`` = key present but the check failed — the
+    caller re-probes and the insert overwrites the entry in place.
+    ``check_ingest=False`` (static) elides the ball recomputation
+    entirely; callers may only pass it while NO ingest has happened since
+    the cache was created (the coalescer tracks this on the host — the
+    flag flips permanently on first ingest). ``live`` masks the
+    batch-padding rows. Hits touch the CLOCK ``ref`` bit of their entry
+    (second chance)."""
+
+    def one(qc, qh, tk):
+        m = _key_match(cache, qc, qh, tk, match_qhash)
+        slot = jnp.argmax(m)
+        key_hit = jnp.any(m)
+        fresh = cache.snap_params[slot] == ep.params_epoch
+        if check_ingest:
+            ball = ball_sums(bucket_codes, bucket_sizes, n_buckets, qc,
+                             cache.probed_k[slot])
+            fresh = fresh & jnp.all(ball == cache.snap_ball[slot])
+        return slot, key_hit & fresh, key_hit & ~fresh, cache.est[slot]
+
+    slots, hit, stale, ests = jax.vmap(one)(qcodes, qhash, tau_keys)
+    hit, stale = hit & live, stale & live
+    ref = cache.ref.at[slots].max(hit)          # touch on hit only
+    return cache._replace(ref=ref), ests, hit, stale
+
+
+@partial(jax.jit, static_argnames=("match_qhash",))
+def insert(cache: EstimateCache, ep: EpochState, bucket_codes: jax.Array,
+           bucket_sizes: jax.Array, n_buckets: jax.Array,
+           qcodes: jax.Array, qhash: jax.Array,
+           tau_keys: jax.Array, ests: jax.Array, nvisited: jax.Array,
+           probed_k: jax.Array, active: jax.Array,
+           match_qhash: bool = True):
+    """Write a probed batch back: for each active lane, overwrite the
+    existing entry with the same key (stale refresh / duplicate-in-flush)
+    or claim a CLOCK victim. Returns ``(cache', n_evicted)`` where
+    ``n_evicted`` counts live entries displaced by new keys.
+
+    ``match_qhash`` must mirror the LOOKUP key semantics (strict at
+    ``reuse_tol=0``, code+band only above): if insert deduplicated more
+    strictly than lookup matches, a stale near-duplicate entry would
+    never be overwritten — lookup could keep finding (and re-flagging)
+    the stale entry while refreshes pile up in other slots.
+
+    The epoch snapshots (probed-ball populations) are taken HERE, against
+    the bucket layout the probe ran under — the coalescer applies pending
+    ingests before probing, so the snapshot is exact for the served
+    estimate."""
+    s = cache.size
+    balls = ball_sums(bucket_codes, bucket_sizes, n_buckets, qcodes,
+                      probed_k)                     # (B, L)
+    pos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(i, carry):
+        c, n_evicted = carry
+        qc, qh, tk = qcodes[i], qhash[i], tau_keys[i]
+        m = _key_match(c, qc, qh, tk, match_qhash)
+        use_existing = jnp.any(m)
+        # second-chance sweep from the hand
+        order = (c.hand + 1 + pos) % s
+        claimable = ~(c.ref[order] & c.valid[order])
+        found = jnp.any(claimable)
+        vpos = jnp.argmax(claimable)                # first claimable
+        victim = order[vpos]
+        passed = (pos < vpos) | ~found              # full sweep if none
+        slot = jnp.where(use_existing, jnp.argmax(m), victim)
+        do = active[i]
+        do_evict = do & ~use_existing
+        n_evicted += (do_evict & c.valid[victim]).astype(jnp.int32)
+        # clear ref on every entry the hand swept past (eviction only)
+        swept = jnp.where(do_evict,
+                          c.ref.at[order].set(
+                              jnp.where(passed, False, c.ref[order])),
+                          c.ref)
+        w = lambda a, v: a.at[slot].set(jnp.where(do, v, a[slot]))
+        c = EstimateCache(
+            qcodes=w(c.qcodes, qc), qhash=w(c.qhash, qh),
+            tau_key=w(c.tau_key, tk),
+            snap_ball=w(c.snap_ball, balls[i]),
+            snap_params=w(c.snap_params, ep.params_epoch),
+            probed_k=w(c.probed_k, probed_k[i]),
+            est=w(c.est, ests[i]), nvisited=w(c.nvisited, nvisited[i]),
+            valid=w(c.valid, jnp.bool_(True)),
+            # fresh entries start with ref CLEAR — only a later hit arms
+            # the second chance, so untouched keys are evicted before any
+            # re-referenced one (a full-ref sweep would otherwise land on
+            # whatever sits just past the hand, touched or not)
+            ref=w(swept, jnp.bool_(False)),
+            hand=jnp.where(do_evict, victim, c.hand))
+        return c, n_evicted
+
+    return jax.lax.fori_loop(0, qcodes.shape[0], body,
+                             (cache, jnp.int32(0)))

@@ -85,7 +85,9 @@ def build_sharded(x_global: jax.Array, cfg: ProberConfig, key: jax.Array,
     params = lsh.init_params(k_params, x_global.shape[-1], cfg)
     # normalise W on the global dataset (one pass, cheap) so every shard
     # quantises identically — matches Alg. 7's global min/max semantics
-    raw = lsh.project(params, x_global)
+    # (pure projections: a later sharded ingest that extends no extreme
+    # reproduces this W bitwise, see lsh.py)
+    raw = lsh.project_raw(params, x_global)
     params = params._replace(w=lsh.normalize_w(raw, cfg.n_regions))
 
     shards = _n_shards(mesh, data_axes)

@@ -57,6 +57,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.cache import epochs as cache_epochs
 from repro.core import lsh, pq as pqmod, prober, updates
 from repro.core.config import ProberConfig
 
@@ -66,6 +67,12 @@ class ProberState(NamedTuple):
     x: jax.Array                      # (C, d) the dataset (exact distances;
                                       #   rows >= n_valid are capacity padding)
     pq: Optional[pqmod.PQIndex]       # None unless cfg.use_pq
+    epochs: Optional["cache_epochs.EpochState"] = None
+                                      # ingest-epoch counters for the serving
+                                      # estimate cache (DESIGN.md §12); None
+                                      # unless attached via track_epochs /
+                                      # attach_epochs — updates bump them
+                                      # inside the same fixed-shape step
 
     @property
     def n_valid(self) -> jax.Array:
@@ -80,24 +87,38 @@ class ProberState(NamedTuple):
 
 def build(x: jax.Array, cfg: ProberConfig, key: jax.Array,
           params: lsh.LSHParams | None = None,
-          capacity: int | None = None) -> ProberState:
+          capacity: int | None = None,
+          track_epochs: bool = False) -> ProberState:
     """Offline build. With ``capacity`` (DESIGN.md §10) the state is
     capacity-padded: arrays sized to ``capacity`` rows with ``x.shape[0]``
     live, so subsequent :func:`update` calls that fit in the spare rows are
-    fixed-shape jitted steps that never recompile."""
+    fixed-shape jitted steps that never recompile. ``track_epochs`` attaches
+    the serving cache's ingest-epoch counters (DESIGN.md §12) so every
+    update also records which buckets it touched."""
     k1, k2 = jax.random.split(key)
     if capacity is None:
         index = lsh.build_index(x, cfg, k1, params=params)
         pq = pqmod.fit(x, cfg, k2) if cfg.use_pq else None
-        return ProberState(index=index, x=x, pq=pq)
-    n = x.shape[0]
-    assert capacity >= n, (capacity, n)
-    x_pad = jnp.pad(jnp.asarray(x, jnp.float32), ((0, capacity - n), (0, 0)))
-    index = lsh.build_index(x_pad, cfg, k1, params=params, n_valid=n)
-    pq = None
-    if cfg.use_pq:
-        pq = pqmod.grow(pqmod.fit(x, cfg, k2), capacity)
-    return ProberState(index=index, x=x_pad, pq=pq)
+        state = ProberState(index=index, x=x, pq=pq)
+    else:
+        n = x.shape[0]
+        assert capacity >= n, (capacity, n)
+        x_pad = jnp.pad(jnp.asarray(x, jnp.float32),
+                        ((0, capacity - n), (0, 0)))
+        index = lsh.build_index(x_pad, cfg, k1, params=params, n_valid=n)
+        pq = None
+        if cfg.use_pq:
+            pq = pqmod.grow(pqmod.fit(x, cfg, k2), capacity)
+        state = ProberState(index=index, x=x_pad, pq=pq)
+    return attach_epochs(state) if track_epochs else state
+
+
+def attach_epochs(state: ProberState) -> ProberState:
+    """Attach (fresh) ingest-epoch state (DESIGN.md §12) so subsequent
+    :func:`update` calls maintain it inside the same fixed-shape jitted
+    ingest step. Counters start at zero — correct for a cache created at
+    (or after) the same moment."""
+    return state._replace(epochs=cache_epochs.init_epochs())
 
 
 @partial(jax.jit, static_argnames=("cfg",))
@@ -125,6 +146,27 @@ def estimate_batch(state: ProberState, qs: jax.Array, taus: jax.Array,
                                      pq_resid=state.pq.resid,
                                      pq_packed=state.pq.packed)
     return prober.estimate_batch(state.index, state.x, qs, taus, cfg, keys)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def estimate_batch_stats(state: ProberState, qs: jax.Array, taus: jax.Array,
+                         cfg: ProberConfig, key: jax.Array):
+    """:func:`estimate_batch` plus probe provenance: returns
+    ``(ests (Q,), probed_k (Q, L), nvisited (Q,))`` where ``probed_k`` is
+    the deepest ring each (query, table) lane folded — what the serving
+    estimate cache snapshots for epoch invalidation (DESIGN.md §12).
+    Estimates are bit-identical to :func:`estimate_batch` with the same
+    key."""
+    keys = jax.random.split(key, qs.shape[0])
+    if cfg.use_pq and state.pq is not None:
+        luts = jax.vmap(lambda q: pqmod.build_query_lut(state.pq, q, cfg))(qs)
+        return prober.estimate_batch(state.index, state.x, qs, taus, cfg,
+                                     keys, pq_codes=state.pq.codes,
+                                     pq_luts=luts, pq_resid=state.pq.resid,
+                                     pq_packed=state.pq.packed,
+                                     with_stats=True)
+    return prober.estimate_batch(state.index, state.x, qs, taus, cfg, keys,
+                                 with_stats=True)
 
 
 def estimate_batch_pooled(state: ProberState, qs: jax.Array, taus: jax.Array,
@@ -160,14 +202,19 @@ def _ingest_core(state: ProberState, x_pad: jax.Array, n_new: jax.Array,
     one compiled step (DESIGN.md §10). The single shared body for the
     single-device (:func:`update`) and sharded
     (``distributed.update_sharded``) paths — ``axis_name`` pools Alg. 7's W
-    renormalisation across that mesh axis (DESIGN.md §4)."""
+    renormalisation across that mesh axis (DESIGN.md §4). When the state
+    carries epoch counters (DESIGN.md §12) they are bumped here too, so the
+    cache-invalidation signal rides the same zero-recompile step."""
     nv = state.index.n_valid
+    old_w = state.index.params.w
     x = updates._write_rows(state.x, x_pad, nv, n_new)
     index = updates._lsh_ingest(state.index, x_pad, n_new, cfg,
                                 axis_name=axis_name)
     pq = updates._pq_ingest(state.pq, x, x_pad, n_new) \
         if state.pq is not None else None
-    return ProberState(index=index, x=x, pq=pq)
+    ep = updates._epoch_ingest(state.epochs, index, old_w, n_new) \
+        if state.epochs is not None else None
+    return ProberState(index=index, x=x, pq=pq, epochs=ep)
 
 
 _ingest_step = jax.jit(_ingest_core, static_argnames=("cfg", "axis_name"))
@@ -181,7 +228,10 @@ def _grow(state: ProberState, new_capacity: int) -> ProberState:
     x = jnp.pad(state.x, ((0, new_capacity - cap), (0, 0)))
     index = lsh.grow_capacity(state.index, new_capacity)
     pq = pqmod.grow(state.pq, new_capacity) if state.pq is not None else None
-    return ProberState(index=index, x=x, pq=pq)
+    # epoch counters are keyed by code VALUE, not row, so growth (which
+    # moves no live point and changes no code) carries them verbatim —
+    # cache entries stay valid across doublings (DESIGN.md §12)
+    return ProberState(index=index, x=x, pq=pq, epochs=state.epochs)
 
 
 def update(state: ProberState, x_new: jax.Array, cfg: ProberConfig,

@@ -30,8 +30,15 @@ bucket axis untrimmed (B = C) so in-capacity dynamic updates are fixed-shape
 jitted steps (updates.py) that never recompile; capacity grows by amortized
 doubling (:func:`grow_capacity`), recompiling once per doubling.
 
-Raw (pre-division) projections are retained so dynamic updates can recompute
-``W`` exactly as paper Alg. 7 (``normalizeW``).
+Raw projections are retained so dynamic updates can recompute ``W`` exactly
+as paper Alg. 7 (``normalizeW``). ``LSHIndex.raw`` stores the PURE
+projection ``a·x`` (no ``b·W`` offset): the offset is a per-function
+constant, so it cancels out of Alg. 7's ``hi - lo`` mathematically — and
+keeping it out of the stored array makes it cancel *bitwise* too. An ingest
+that extends no projection extreme then reproduces ``W`` exactly (no
+ulp-level drift from re-adding a rescaled offset), which is what lets the
+serving cache's epoch invalidation (DESIGN.md §12) treat "W unchanged" as
+"code geometry unchanged" instead of flushing on every ingest.
 """
 from __future__ import annotations
 
@@ -96,19 +103,31 @@ def init_params(key: jax.Array, dim: int, cfg: ProberConfig) -> LSHParams:
 
 
 def project(params: LSHParams, x: jax.Array) -> jax.Array:
-    """Raw projections ``a·x + b·w`` of shape (..., L*K).
+    """Offset projections ``a·x + b·w`` of shape (..., L*K) — what
+    :func:`quantize` divides by ``w`` to get bucket ids.
 
     ``b`` is stored as a fraction of ``w`` so that re-normalising ``w``
     (paper Alg. 7) keeps the offset a valid U[0, W) sample.
     """
-    return x.astype(jnp.float32) @ params.a + params.b * params.w
+    return project_raw(params, x) + params.b * params.w
+
+
+def project_raw(params: LSHParams, x: jax.Array) -> jax.Array:
+    """Pure projections ``a·x`` (..., L*K) — offset-free, so independent of
+    ``w``. This is what the index retains (``LSHIndex.raw``) and what
+    Alg. 7's ``normalizeW`` reduces over: min/max of ``a·x`` are exactly
+    reproducible across ingests, so ``W`` only moves when an extreme
+    actually moves (see module docstring)."""
+    return x.astype(jnp.float32) @ params.a
 
 
 def normalize_w(raw: jax.Array, n_regions: int,
                 n_valid: jax.Array | None = None,
                 axis_name=None) -> jax.Array:
     """Paper Alg. 7 ``normalizeW``: per-function width from the min/max of the
-    raw projections so each function yields ~``n_regions`` distinct values.
+    raw (pure ``a·x``) projections so each function yields ~``n_regions``
+    distinct values. Offset-free inputs make the result bitwise-reproducible
+    across ingests whose points extend no extreme (module docstring).
 
     ``n_valid`` masks capacity-padding rows (DESIGN.md §10) out of the
     min/max so dead rows never influence the bucket widths. Under shard_map
@@ -279,14 +298,12 @@ def build_index(x: jax.Array, cfg: ProberConfig, key: jax.Array,
     nv = None if n_valid is None else jnp.asarray(n_valid, jnp.int32)
     if params is None:
         params = init_params(key, x.shape[-1], cfg)
-        raw = project(params, x)
-        w = normalize_w(raw, cfg.n_regions, nv)
-        params = params._replace(w=w)
-        raw = project(params, x)  # offsets rescale with w
+        raw = project_raw(params, x)                        # pure a·x
+        params = params._replace(w=normalize_w(raw, cfg.n_regions, nv))
     else:
-        raw = project(params, x)
+        raw = project_raw(params, x)
     n = x.shape[0]
-    codes = quantize(raw, params.w)                         # (C, L*K)
+    codes = quantize(raw + params.b * params.w, params.w)   # (C, L*K)
     codes = codes.reshape(n, cfg.n_tables, cfg.n_funcs)
     codes = jnp.swapaxes(codes, 0, 1)                       # (L, C, K)
     if nv is not None:

@@ -337,6 +337,21 @@ def estimate_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
       iteration is exactly the op-overhead-dominated work that batching
       amortises.
     """
+    final = _run_one_table(view, qcode, qualfn, cfg, key,
+                           central_qualfn=central_qualfn,
+                           exact_qualfn=exact_qualfn, axis_name=axis_name)
+    return final["est"], final["nvisited"]
+
+
+def _run_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
+                   cfg: ProberConfig, key: jax.Array,
+                   central_qualfn: QualFn | None = None,
+                   exact_qualfn: QualFn | None = None,
+                   axis_name=None) -> dict:
+    """The :func:`estimate_one_table` body, returning the loop's FINAL state
+    dict instead of just (est, nvisited) — ``final["k"] - 1`` is the deepest
+    ring the probe folded, which the estimate cache snapshots for its epoch
+    invalidation check (DESIGN.md §12)."""
     n_rings = view.bucket_codes.shape[-1]  # max k = number of hash functions
     n_buckets = view.bucket_sizes.shape[-1]
     ctx, est0, visited0 = _table_setup(view, qcode, central_qualfn or qualfn,
@@ -372,8 +387,7 @@ def estimate_one_table(view: TableView, qcode: jax.Array, qualfn: QualFn,
                           axis_name=axis_name)
 
     init = _init_state(ctx, est0, visited0, n_rings)
-    final = jax.lax.while_loop(lambda s: ~s["done"], body, init)
-    return final["est"], final["nvisited"]
+    return jax.lax.while_loop(lambda s: ~s["done"], body, init)
 
 
 def make_exact_qualfn(x: jax.Array, q: jax.Array, tau_sq: jax.Array,
@@ -529,7 +543,8 @@ def estimate(index: lsh.LSHIndex, x: jax.Array, q: jax.Array, tau: jax.Array,
 def _estimate_batch_compact(index: lsh.LSHIndex, x: jax.Array, qs: jax.Array,
                             taus: jax.Array, cfg: ProberConfig,
                             keys: jax.Array, pq_codes=None, pq_luts=None,
-                            pq_resid=None, pq_packed=None) -> jax.Array:
+                            pq_resid=None, pq_packed=None,
+                            with_stats: bool = False):
     """Skew-resilient batched scheduler (DESIGN.md §11).
 
     The (Q, L) lane grid is flattened into one lane axis. Ring construction
@@ -675,18 +690,26 @@ def _estimate_batch_compact(index: lsh.LSHIndex, x: jax.Array, qs: jax.Array,
 
     perm, st = jax.lax.while_loop(outer_cond, outer_body,
                                   (jnp.arange(nlp, dtype=jnp.int32), state))
-    ests = jnp.zeros((nlp,), jnp.float32).at[perm].set(st["est"])
-    return ests[:nl].reshape(nq, nt).mean(axis=1)
+
+    def unperm(v, dtype):
+        return jnp.zeros((nlp,), dtype).at[perm].set(v)[:nl].reshape(nq, nt)
+
+    ests = unperm(st["est"], jnp.float32).mean(axis=1)
+    if not with_stats:
+        return ests
+    probed_k = jnp.clip(unperm(st["k"], jnp.int32) - 1, 0, n_rings)
+    nvis = unperm(st["nvisited"], jnp.int32).sum(axis=1)
+    return ests, probed_k, nvis
 
 
-@partial(jax.jit, static_argnames=("cfg", "axis_name"))
+@partial(jax.jit, static_argnames=("cfg", "axis_name", "with_stats"))
 def estimate_batch(index: lsh.LSHIndex, x: jax.Array, qs: jax.Array,
                    taus: jax.Array, cfg: ProberConfig, keys: jax.Array,
                    pq_codes: jax.Array | None = None,
                    pq_luts: jax.Array | None = None,
                    pq_resid: jax.Array | None = None,
                    pq_packed: jax.Array | None = None,
-                   axis_name=None) -> jax.Array:
+                   axis_name=None, with_stats: bool = False):
     """Batched Alg. 1–3: estimate Q cardinalities in one jitted step.
 
     ``qs`` is (Q, d), ``taus`` (Q,), ``keys`` (Q, 2) — one PRNG key per query
@@ -711,13 +734,21 @@ def estimate_batch(index: lsh.LSHIndex, x: jax.Array, qs: jax.Array,
     while_loop runs the same iteration count on every shard and the in-loop
     psum lines up. Sync mode always uses the monolithic lockstep loop
     (compaction is local-control only — DESIGN.md §11).
+
+    ``with_stats=True`` (static) additionally returns the per-(query,
+    table) deepest folded ring ``probed_k`` (Q, L) and per-query pooled
+    sample counts ``nvisited`` (Q,) — the provenance the estimate cache
+    snapshots for its epoch-invalidation check (DESIGN.md §12). The
+    estimates themselves are bit-identical with or without stats.
     """
+    n_rings = index.codes.shape[-1]
     if axis_name is None and cfg.lane_block > 0 and \
             qs.shape[0] * index.n_tables > cfg.lane_tile:
         return _estimate_batch_compact(index, x, qs, taus, cfg, keys,
                                        pq_codes=pq_codes, pq_luts=pq_luts,
                                        pq_resid=pq_resid,
-                                       pq_packed=pq_packed)
+                                       pq_packed=pq_packed,
+                                       with_stats=with_stats)
     qcodes = lsh.hash_point(index.params, qs, index.n_tables)   # (Q, L, K)
     views = table_views(index)
     use_pq = pq_codes is not None and pq_luts is not None
@@ -730,16 +761,21 @@ def estimate_batch(index: lsh.LSHIndex, x: jax.Array, qs: jax.Array,
         tkeys = jax.random.split(key, index.n_tables)
 
         def per_table(view, qc, k):
-            est, _ = estimate_one_table(view, qc, qualfn, cfg, k,
-                                        central_qualfn=central_qualfn,
-                                        exact_qualfn=exact_qualfn,
-                                        axis_name=axis_name)
-            return est
+            final = _run_one_table(view, qc, qualfn, cfg, k,
+                                   central_qualfn=central_qualfn,
+                                   exact_qualfn=exact_qualfn,
+                                   axis_name=axis_name)
+            return final["est"], final["nvisited"], final["k"]
 
-        return jnp.mean(jax.vmap(per_table)(views, qcode, tkeys))
+        ests, nvis, ks = jax.vmap(per_table)(views, qcode, tkeys)
+        return (jnp.mean(ests), jnp.clip(ks - 1, 0, n_rings),
+                jnp.sum(nvis))
 
     if not use_pq:
-        return jax.vmap(
+        ests, probed_k, nvis = jax.vmap(
             lambda q, t, qc, k: per_query(q, t, qc, k, None)
         )(qs, taus, qcodes, keys)
-    return jax.vmap(per_query)(qs, taus, qcodes, keys, pq_luts)
+    else:
+        ests, probed_k, nvis = jax.vmap(per_query)(qs, taus, qcodes, keys,
+                                                   pq_luts)
+    return (ests, probed_k, nvis) if with_stats else ests

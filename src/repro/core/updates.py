@@ -80,17 +80,17 @@ def _lsh_ingest(index: lsh.LSHIndex, x_new: jax.Array, n_new: jax.Array,
     """
     params = index.params
     nv = index.n_valid
-    raw_new = lsh.project(params, x_new)              # under the current w
+    raw_new = lsh.project_raw(params, x_new)          # pure a·x, w-free
     raw_all = _write_rows(index.raw, raw_new, nv, n_new)
     nv2 = nv + n_new
-    # normalizeW over ALL live raw hash values (old + new)
+    # normalizeW over ALL live raw projections (old + new). ``raw`` is
+    # offset-free, so when the batch extends no extreme this reproduces W
+    # BITWISE — old points' codes below are then reproduced bitwise too,
+    # which is what lets the serving cache treat "W unchanged" as "bucket
+    # geometry unchanged" (DESIGN.md §12)
     w_new = lsh.normalize_w(raw_all, cfg.n_regions, nv2, axis_name=axis_name)
-    # offsets b are stored as a fraction of w (see lsh.project): rebase the
-    # additive offset from b*w_old to b*w_new before re-quantising
-    proj = raw_all - params.b * params.w              # pure x @ a
     params = params._replace(w=w_new)
-    raw_adj = proj + params.b * w_new
-    codes = lsh.quantize(raw_adj, w_new)
+    codes = lsh.quantize(raw_all + params.b * w_new, w_new)
     cap = raw_all.shape[0]
     codes = codes.reshape(cap, cfg.n_tables, cfg.n_funcs)
     codes = jnp.swapaxes(codes, 0, 1)
@@ -99,12 +99,31 @@ def _lsh_ingest(index: lsh.LSHIndex, x_new: jax.Array, n_new: jax.Array,
     fits = lsh._pack_fits(codes, jnp.arange(cap) < nv2)
     order, bcodes, starts, sizes, nb = jax.vmap(
         lsh._build_table, in_axes=(0, None, None))(codes, nv2, fits)
-    return lsh.LSHIndex(params=params, raw=raw_adj, codes=codes, order=order,
+    return lsh.LSHIndex(params=params, raw=raw_all, codes=codes, order=order,
                         bucket_codes=bcodes, bucket_starts=starts,
                         bucket_sizes=sizes, n_buckets=nb, n_valid=nv2)
 
 
 _lsh_ingest_jit = jax.jit(_lsh_ingest, static_argnames=("cfg", "axis_name"))
+
+
+def _epoch_ingest(ep, index: lsh.LSHIndex, old_w: jax.Array,
+                  n_new: jax.Array):
+    """Fold one ingest into the cache-invalidation epoch state (DESIGN.md
+    §12) inside the same fixed-shape step as the Alg. 7 rebuild — zero
+    extra dispatches, zero-recompile contract intact.
+
+    The per-bucket ingest signal needs no explicit counters: the rebuilt
+    layout's ``bucket_sizes`` ARE the per-bucket epochs (populations are
+    monotone under the §5 stream — see repro/cache/epochs.py). What must
+    be tracked is the hash-function GENERATION: if Alg. 7 moved any width
+    (``w != old_w`` — bitwise-exact thanks to the offset-free retained
+    projections), every stored code may have shifted and the whole cache
+    generation is retired via the params epoch.
+    """
+    from repro.cache import epochs as cache_epochs
+    w_changed = jnp.any(index.params.w != old_w)
+    return cache_epochs.ingest_bump(ep, n_new, w_changed)
 
 
 def _pad_batch(x_new: jax.Array) -> tuple[jax.Array, jax.Array]:

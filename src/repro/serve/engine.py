@@ -22,7 +22,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import estimator as E, updates
+from repro.cache import estimate_cache as C
+from repro.core import estimator as E, lsh, updates
 from repro.core.config import ProberConfig
 from repro.models import get_family
 from repro.models.base import ModelConfig
@@ -35,6 +36,26 @@ class CardRequest:
     q: np.ndarray                 # (d,) query embedding
     tau: float
     est: Optional[float] = None   # filled by flush()
+    provenance: Optional[str] = None   # "probe" | "hit" | "stale-refresh"
+                                  # — how flush() produced the estimate
+    probed_k: Optional[np.ndarray] = None   # (L,) deepest ring folded per
+                                  # table when this request was PROBED
+                                  # (None on cache hits — the entry's
+                                  # original probe set the rings)
+    nvisited: Optional[int] = None     # samples the probe drew (audit)
+
+
+class CardResult(float):
+    """A flush() result value: a float (the estimate) carrying per-request
+    provenance so callers can audit what they were served — a fresh probe,
+    a cache hit, or a probe that refreshed a stale entry. Compares/serialises
+    exactly like the plain float it replaced."""
+    provenance: str
+
+    def __new__(cls, est: float, provenance: str = "probe"):
+        self = super().__new__(cls, est)
+        self.provenance = provenance
+        return self
 
 
 class CardinalityCoalescer:
@@ -63,17 +84,46 @@ class CardinalityCoalescer:
     Chernoff statistics), and :meth:`ingest` routes new points through the
     round-robin sharded recompile-free update step, tracking per-shard live
     counts on the host so dispatch stays async.
+
+    With ``cache_size > 0`` (DESIGN.md §12) each flush first partitions the
+    batch against the workload-aware estimate cache: hits are served out of
+    the fixed-capacity array cache, only the MISS lanes are probed (a
+    smaller ``estimate_batch`` — fewer lanes in means fewer compacted tiles
+    run under the §11 scheduler), and fresh results are written back with
+    their ingest-epoch snapshots. A hit is served only while no ingest has
+    touched any bucket the original probe visited (the O(rings) epoch
+    check); ``reuse_tol`` widens the key from exact-repeat to LSH
+    near-duplicate matching (see repro/cache). Local (unsharded) serving
+    only — the cache keys on this process's index geometry. Per-request
+    provenance lands in :class:`CardRequest`/:class:`CardResult`; hit /
+    miss / stale / evict counters accumulate in :attr:`cache_stats`.
     """
 
     def __init__(self, state: E.ProberState, cfg: ProberConfig,
                  key: jax.Array, max_batch: int = 256,
-                 mesh=None, data_axes=("data",), mode: str = "local"):
+                 mesh=None, data_axes=("data",), mode: str = "local",
+                 cache_size: int = 0, reuse_tol: float = 0.0):
         assert mode in ("local", "sync"), mode
+        assert cache_size == 0 or mesh is None, \
+            "the estimate cache serves the local path only (DESIGN.md §12)"
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
         self.mode = mode
-        self.state = state              # property: also syncs _n_valid
         self.cfg = cfg
+        self.reuse_tol = float(reuse_tol)
+        self._cache = C.init_cache(cache_size, cfg.n_tables, cfg.n_funcs) \
+            if cache_size > 0 else None
+        self.cache_stats = {"hits": 0, "misses": 0, "stale": 0, "evicts": 0,
+                            "lookups": 0}
+        # host-tracked: False until the first ingest (or external state
+        # swap) — lets lookup() statically elide the ball-sum recompute
+        # while the corpus is provably unchanged (repro/cache/epochs.py)
+        self._check_ingest = False
+        self._hash = jax.jit(
+            lambda params, qs: lsh.hash_point(params, qs, cfg.n_tables))
+        self.state = state              # property: also syncs _n_valid
+        self._check_ingest = False      # the swap bump above is moot while
+                                        # the cache is still empty
         self.key = key
         # round up to a power of two: padding in flush() must never exceed
         # the configured cap, or the compile-shape bound above breaks
@@ -94,6 +144,15 @@ class CardinalityCoalescer:
         # re-reads the live count whenever the state is swapped from outside;
         # the internal ingest loop bypasses this (tracking the count on the
         # host) so chunk dispatch never blocks on a device_get
+        if self._cache is not None:
+            if st.epochs is None:
+                st = E.attach_epochs(st)
+            # an externally swapped state may hold ARBITRARY new data whose
+            # ingests this coalescer never saw — retire the whole cache
+            # generation rather than risk a stale hit against it
+            st = st._replace(epochs=st.epochs._replace(
+                params_epoch=st.epochs.params_epoch + jnp.uint32(1)))
+            self._check_ingest = True
         self._state = st
         nv = jax.device_get(st.index.n_valid)
         # sharded states carry one live count per shard
@@ -136,6 +195,7 @@ class CardinalityCoalescer:
             self._apply_ingest_chunk(min(chunk, len(self._ingest_buf)))
 
     def _apply_ingest_chunk(self, k: int):
+        self._check_ingest = True       # lookups must re-check ball sums
         buf = self._ingest_buf
         part, rest = buf[:k], buf[k:]
         self._ingest_buf = rest if len(rest) else None
@@ -153,7 +213,11 @@ class CardinalityCoalescer:
         """Apply pending ingests, then run jitted estimate_batch steps
         (max_batch each) until nothing is pending; returns every answered
         {rid: estimate} not yet returned — including requests already
-        answered by a submit()-triggered auto-flush."""
+        answered by a submit()-triggered auto-flush. Values are
+        :class:`CardResult` — floats that also carry per-request
+        ``provenance`` (``"probe"`` | ``"hit"`` | ``"stale-refresh"``) so
+        callers can audit whether an estimate came off a fresh probe or
+        the estimate cache."""
         out = self._answered
         self._answered = {}
         out.update(self._drain())
@@ -174,20 +238,86 @@ class CardinalityCoalescer:
                 qs[i], taus[i] = r.q, r.tau
             key = jax.random.fold_in(self.key, self._n_flushes)
             self._n_flushes += 1
-            if self.mesh is not None:
+            if self._cache is not None:
+                ests, prov, pks, nvs = self._flush_cached(qs, taus, n, key)
+                for i, r in enumerate(batch):
+                    r.probed_k, r.nvisited = pks[i], nvs[i]
+            elif self.mesh is not None:
                 from repro.core import distributed as D
                 ests = np.asarray(D.estimate_sharded(
                     self.state, jnp.asarray(qs), jnp.asarray(taus),
                     self.cfg, key, self.mesh, data_axes=self.data_axes,
                     mode=self.mode))
+                prov = ["probe"] * n
             else:
                 ests = np.asarray(E.estimate_batch(
                     self.state, jnp.asarray(qs), jnp.asarray(taus),
                     self.cfg, key))
+                prov = ["probe"] * n
             for i, r in enumerate(batch):
                 r.est = float(ests[i])
-                out[r.rid] = r.est
+                r.provenance = prov[i]
+                out[r.rid] = CardResult(r.est, prov[i])
         return out
+
+    def _flush_cached(self, qs: np.ndarray, taus: np.ndarray, n: int,
+                      key: jax.Array):
+        """One flush through the estimate cache (DESIGN.md §12): look every
+        request up, probe ONLY the miss lanes (padded to a power of two so
+        the §11 compacting scheduler sees at most log2(max_batch) batch
+        shapes), write fresh results back with their epoch snapshots, and
+        merge. Returns ``(ests (n,), provenance (n,), probed_k (n,),
+        nvisited (n,))`` — the latter two per-request audit stats (None
+        for hits, whose rings were set by the entry's original probe)."""
+        st = self._state
+        strict = self.reuse_tol <= 0.0
+        jqs = jnp.asarray(qs)
+        qcodes = self._hash(st.index.params, jqs)
+        qhash = C.query_hash(jqs)
+        tkeys = C.tau_band(jnp.asarray(taus), self.reuse_tol)
+        live = jnp.arange(qs.shape[0]) < n
+        self._cache, c_est, hit, stale = C.lookup(
+            self._cache, st.epochs, st.index.bucket_codes,
+            st.index.bucket_sizes, st.index.n_buckets, qcodes, qhash,
+            tkeys, live, match_qhash=strict,
+            check_ingest=self._check_ingest)
+        hit = np.asarray(hit)[:n]
+        stale = np.asarray(stale)[:n]
+        ests = np.asarray(c_est)[:n].copy()
+        miss = np.nonzero(~hit)[0]
+        self.cache_stats["lookups"] += n
+        self.cache_stats["hits"] += int(hit.sum())
+        self.cache_stats["misses"] += len(miss)
+        self.cache_stats["stale"] += int(stale.sum())
+        prov = ["hit" if hit[i] else
+                ("stale-refresh" if stale[i] else "probe")
+                for i in range(n)]
+        pks: list = [None] * n
+        nvs: list = [None] * n
+        if len(miss):
+            pm = updates.next_pow2(len(miss))
+            qs_m = np.zeros((pm, qs.shape[1]), np.float32)
+            taus_m = np.zeros((pm,), np.float32)
+            qs_m[:len(miss)], taus_m[:len(miss)] = qs[miss], taus[miss]
+            jqs_m, jtaus_m = jnp.asarray(qs_m), jnp.asarray(taus_m)
+            ests_m, probed_k, nvis = E.estimate_batch_stats(
+                st, jqs_m, jtaus_m, self.cfg, key)
+            active = jnp.arange(pm) < len(miss)
+            # keys for the write-back: gather the rows already computed for
+            # the full-batch lookup (no second hash matmul / fingerprint
+            # pass); rows past len(miss) are padding and inactive
+            mrows = jnp.asarray(np.pad(miss, (0, pm - len(miss))))
+            self._cache, n_evict = C.insert(
+                self._cache, st.epochs, st.index.bucket_codes,
+                st.index.bucket_sizes, st.index.n_buckets,
+                qcodes[mrows], qhash[mrows], tkeys[mrows],
+                ests_m, nvis, probed_k, active, match_qhash=strict)
+            self.cache_stats["evicts"] += int(n_evict)
+            ests[miss] = np.asarray(ests_m)[:len(miss)]
+            pk_np, nv_np = np.asarray(probed_k), np.asarray(nvis)
+            for j, i in enumerate(miss):
+                pks[i], nvs[i] = pk_np[j], int(nv_np[j])
+        return ests, prov, pks, nvs
 
 
 @dataclasses.dataclass

@@ -39,7 +39,17 @@ class SemanticPlanner:
     def __init__(self, corpus_embeddings, cfg: ProberConfig, key,
                  max_calls: int = 512, slot_budget: int = 8,
                  max_batch: int = 256, capacity: int | None = None,
-                 mesh=None, data_axes=("data",), mode: str = "local"):
+                 mesh=None, data_axes=("data",), mode: str = "local",
+                 cache_size: int = 0, reuse_tol: float = 0.0):
+        """``cache_size``/``reuse_tol`` (DESIGN.md §12) switch on the
+        workload-aware estimate cache for repeated operator traffic:
+        ``reuse_tol = 0`` reuses only exact-repeat ``(q, tau)`` plans
+        (hits bit-identical to a fresh probe, zero extra q-error);
+        ``reuse_tol > 0`` also serves LSH near-duplicates whose tau falls
+        in the same multiplicative ``(1 + reuse_tol)`` band — higher hit
+        rate for a bounded extra q-error. Ingests via
+        :meth:`update_corpus` invalidate affected entries exactly (the
+        epoch check), so plans never reflect pre-update cardinalities."""
         self.cfg = cfg
         self.max_calls = max_calls
         self.slot_budget = slot_budget
@@ -50,7 +60,8 @@ class SemanticPlanner:
         # and estimates run distributed with the chosen stopping ``mode``.
         if mesh is None:
             self.state = E.build(corpus_embeddings, cfg, key,
-                                 capacity=capacity)
+                                 capacity=capacity,
+                                 track_epochs=cache_size > 0)
         else:
             from repro.core import distributed as D
             self.state, _ = D.build_sharded(corpus_embeddings, cfg, key,
@@ -61,7 +72,16 @@ class SemanticPlanner:
                                                max_batch=max_batch,
                                                mesh=mesh,
                                                data_axes=data_axes,
-                                               mode=mode)
+                                               mode=mode,
+                                               cache_size=cache_size,
+                                               reuse_tol=reuse_tol)
+        self._cached = cache_size > 0
+
+    @property
+    def cache_stats(self) -> dict:
+        """Cumulative estimate-cache counters (hits / misses / stale /
+        evicts / lookups) of the underlying coalescer."""
+        return dict(self._coalescer.cache_stats)
 
     def update_corpus(self, new_embeddings):
         """Dynamic data updates (paper §5) keep the planner fresh without a
@@ -73,7 +93,9 @@ class SemanticPlanner:
         self.state = self._coalescer.state
 
     def estimate(self, q, tau) -> float:
-        if self._mesh is not None:      # route through the sharded path
+        # sharded and cached serving both route through the coalescer (the
+        # cache lives there; single-shot estimates must hit and fill it too)
+        if self._mesh is not None or self._cached:
             return self.estimate_batch([q], [tau])[0]
         self._key, sub = jax.random.split(self._key)
         return float(E.estimate(self.state, q, tau, self.cfg, sub))
